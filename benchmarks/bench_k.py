@@ -1,0 +1,61 @@
+"""Paper Figs. 9/10/11: impact of k on response time, number of distinct
+cores, and connected components inside the result cores."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, engine, graph, pick_queries, timeit
+
+
+def _n_components(g, core) -> int:
+    """Union-find over the core's edges (host-side)."""
+    verts = core.vertices
+    if verts.size == 0:
+        return 0
+    idx = {int(v): i for i, v in enumerate(verts)}
+    parent = list(range(len(verts)))
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    lo, hi = core.tti
+    m = (g.t >= lo) & (g.t <= hi)
+    vset = set(idx)
+    for u, v in zip(g.src[m], g.dst[m]):
+        u, v = int(u), int(v)
+        if u in vset and v in vset:
+            ra, rb = find(idx[u]), find(idx[v])
+            if ra != rb:
+                parent[ra] = rb
+    return len({find(i) for i in range(len(verts))})
+
+
+def run(name: str = "collegemsg", span_uts: int = 90):
+    g = graph(name)
+    eng = engine(name)
+    q = pick_queries(name, 1, span_uts=span_uts, seed=9)[0]
+    rows = []
+    for k in range(2, 7):
+        t_otcd = timeit(lambda: eng.query(k, q["ts"], q["te"]), repeat=2)
+        t_tcd = timeit(lambda: eng.query(k, q["ts"], q["te"],
+                                         algorithm="tcd"))
+        res = eng.query(k, q["ts"], q["te"])
+        n_cc = int(np.sum([_n_components(g, c) for c in res.cores]))
+        sizes = [c.n_vertices for c in res.cores]
+        rows.append({
+            "graph": name, "k": k, "ts": q["ts"], "te": q["te"],
+            "t_otcd_s": t_otcd, "t_tcd_s": t_tcd,
+            "n_cores": len(res), "n_components": n_cc,
+            "avg_core_size": float(np.mean(sizes)) if sizes else 0.0,
+        })
+    emit("bench_k", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,46 @@
+"""Paper Table 5: memory — ArrayTEL bytes (device-resident working set),
+peel-state bytes, and the PHC-index footprint it replaces."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PHCIndex
+from repro.graphs import powerlaw_temporal
+
+from benchmarks.common import GRAPH_K, emit, graph, pick_queries
+
+SCALES = {
+    "collegemsg": None,  # use the shared fixture
+    "email": None,
+    "mathoverflow": None,
+    "youtube-mini": dict(num_vertices=60_000, num_edges=400_000,
+                         time_span=131_072, burst_periods=16, seed=21),
+}
+
+
+def run():
+    rows = []
+    for name, spec in SCALES.items():
+        g = graph(name) if spec is None else powerlaw_temporal(**spec)
+        tel_bytes = g.memory_bytes()
+        peel_state = g.num_vertices  # 1 bool per vertex per in-flight cell
+        row = {
+            "graph": name, "V": g.num_vertices, "E": g.num_edges,
+            "P": g.num_pairs, "tel_bytes": tel_bytes,
+            "tel_bytes_per_edge": tel_bytes / max(1, g.num_edges),
+            "peel_state_bytes_per_lane": peel_state,
+        }
+        if name in GRAPH_K and g.num_edges <= 30_000:
+            q = pick_queries(name, 1, span_uts=60)[0]
+            idx = PHCIndex(g, GRAPH_K[name], q["ts"], q["te"])
+            row["phc_index_bytes_window"] = idx.nbytes()
+            row["phc_index_vs_tel"] = idx.nbytes() / tel_bytes
+        rows.append(row)
+    emit("bench_memory", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,35 @@
+"""Paper Table 4: pruning-rule trigger counts and pruned-cell percentages."""
+
+from __future__ import annotations
+
+from benchmarks.common import GRAPH_K, emit, engine, pick_queries
+
+
+def run(per_graph: int = 2, span_uts: int = 90):
+    rows = []
+    for name in ("collegemsg", "email", "mathoverflow"):
+        eng = engine(name)
+        for q in pick_queries(name, per_graph, span_uts=span_uts, seed=5):
+            k = q["k"]
+            s = eng.query(k, q["ts"], q["te"]).stats
+            denom = max(1, s.cells_total)
+            rows.append({
+                "graph": name, "k": k, "ts": q["ts"], "te": q["te"],
+                "cells_total": s.cells_total,
+                "por_triggers": s.por_triggers,
+                "pou_triggers": s.pou_triggers,
+                "pol_triggers": s.pol_triggers,
+                "pct_por": 100.0 * s.pruned_por / denom,
+                "pct_pou": 100.0 * s.pruned_pou / denom,
+                "pct_pol": 100.0 * s.pruned_pol / denom,
+                "pct_empty": 100.0 * s.pruned_empty / denom,
+                "pct_total_pruned": s.pruned_pct(),
+                "duplicates": s.duplicates,
+            })
+    emit("bench_pruning", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,50 @@
+"""Paper Fig. 7 / Table 3: response time of iPHC-baseline vs TCD vs OTCD
+(+ wave-mode OTCD, beyond paper) on selected valid queries."""
+
+from __future__ import annotations
+
+from repro.core import PHCIndex, iphc_query
+
+from benchmarks.common import GRAPH_K, emit, engine, graph, pick_queries, \
+    timeit
+
+
+def run(per_graph: int = 4, span_uts: int = 70):
+    rows = []
+    qid = 0
+    for name in ("collegemsg", "email", "mathoverflow"):
+        g = graph(name)
+        eng = engine(name)
+        for q in pick_queries(name, per_graph, span_uts=span_uts):
+            k = q["k"]
+            qid += 1
+            ts, te = q["ts"], q["te"]
+            t_otcd = timeit(lambda: eng.query(k, ts, te), repeat=2)
+            t_wave = timeit(
+                lambda: eng.query(k, ts, te, mode="wave", wave=16), repeat=2)
+            t_tcd = timeit(lambda: eng.query(k, ts, te, algorithm="tcd"))
+            idx = PHCIndex(g, k, ts, te)
+            t_iphc = timeit(lambda: iphc_query(g, idx, k, ts, te))
+            res = eng.query(k, ts, te)
+            iphc_res = iphc_query(g, idx, k, ts, te)
+            assert set(c.tti for c in res.cores) == \
+                set(c.tti for c in iphc_res.cores), (name, ts, te)
+            rows.append({
+                "id": qid, "graph": name, "k": k, "ts": ts, "te": te,
+                "span_s": te - ts, "n_results": len(res),
+                "t_otcd_s": t_otcd, "t_otcd_wave_s": t_wave,
+                "t_tcd_s": t_tcd, "t_iphc_online_s": t_iphc,
+                "t_phc_index_build_s": idx.build_time_s,
+                "phc_index_bytes": idx.nbytes(),
+                "speedup_otcd_vs_tcd": t_tcd / t_otcd,
+                "speedup_otcd_vs_iphc": t_iphc / t_otcd,
+                "cells_evaluated_otcd": res.stats.cells_evaluated,
+                "cells_total": res.stats.cells_total,
+            })
+    emit("bench_queries", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,39 @@
+"""Paper Fig. 12: impact of the query time span (quadratic cell count vs
+output-bound OTCD)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GRAPH_K, emit, engine, graph, timeit
+
+
+def run(name: str = "collegemsg"):
+    g = graph(name)
+    eng = engine(name)
+    k = GRAPH_K[name]
+    uts = g.unique_ts
+    rows = []
+    base = 40
+    start = uts.size // 3
+    for mult in (1, 2, 3, 4, 5):
+        n = base * mult
+        ts = int(uts[start])
+        te = int(uts[min(start + n, uts.size - 1)])
+        t_otcd = timeit(lambda: eng.query(k, ts, te), repeat=2)
+        t_wave = timeit(lambda: eng.query(k, ts, te, mode="wave", wave=16))
+        t_tcd = timeit(lambda: eng.query(k, ts, te, algorithm="tcd"))
+        res = eng.query(k, ts, te)
+        rows.append({
+            "graph": name, "k": k, "span_uts": n, "ts": ts, "te": te,
+            "cells_total": res.stats.cells_total,
+            "n_cores": len(res),
+            "t_otcd_s": t_otcd, "t_otcd_wave_s": t_wave, "t_tcd_s": t_tcd,
+        })
+    emit("bench_span", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

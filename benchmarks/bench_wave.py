@@ -1,0 +1,63 @@
+"""Beyond-paper engine benches: wave width scaling, Pallas kernel vs XLA
+segment-sum degree path, and peel-iteration counts (feeds the roofline's
+per-iteration cost model)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.wave import make_segsum_fns, tcd_wave
+
+from benchmarks.common import GRAPH_K, emit, engine, graph, pick_queries, \
+    timeit
+
+
+def run(name: str = "collegemsg"):
+    g = graph(name)
+    eng = engine(name)
+    k = GRAPH_K[name]
+    q = pick_queries(name, 1, span_uts=120, seed=3)[0]
+    rows = []
+    for wave in (1, 4, 16, 64):
+        mode = "serial" if wave == 1 else "wave"
+        kw = {} if wave == 1 else {"mode": "wave", "wave": wave}
+        t = timeit(lambda: eng.query(k, q["ts"], q["te"], **kw), repeat=2)
+        res = eng.query(k, q["ts"], q["te"], **kw)
+        rows.append({"bench": "wave_width", "graph": name, "wave": wave,
+                     "t_s": t, "device_steps": res.stats.device_steps,
+                     "cells": res.stats.cells_evaluated,
+                     "n_cores": len(res)})
+
+    # kernel-vs-XLA degree path on a standalone wave
+    tel = g.device_tel()
+    uts = g.unique_ts
+    qn = 16
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, uts.size - 10, qn)
+    ts = jnp.asarray(uts[idx], jnp.int32)
+    te = jnp.asarray(uts[np.minimum(idx + 80, uts.size - 1)], jnp.int32)
+    alive = jnp.ones((qn, g.num_vertices), bool)
+    for use_kernel, label in ((False, "xla_segsum"), (True, "pallas")):
+        sp, sv = make_segsum_fns(g, use_kernel=use_kernel)
+
+        def go():
+            r = tcd_wave(tel, alive, ts, te, k, 1,
+                         num_vertices=g.num_vertices,
+                         seg_pair=sp, seg_vert=sv)
+            r.alive.block_until_ready()
+            return r
+
+        t = timeit(go, repeat=2)
+        r = go()
+        rows.append({"bench": "degree_path", "graph": name, "path": label,
+                     "t_s": t, "iters": int(r.iters),
+                     "note": "pallas runs interpret-mode on CPU; the TPU "
+                             "comparison is structural (see EXPERIMENTS)"})
+    emit("bench_wave", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

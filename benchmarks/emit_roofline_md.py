@@ -1,0 +1,34 @@
+"""Inject the generated §Roofline table into EXPERIMENTS.md (between the
+ROOFLINE_TABLE marker and the next heading-levelled prose)."""
+
+import io
+import os
+import re
+import sys
+from contextlib import redirect_stdout
+
+HERE = os.path.dirname(__file__)
+
+
+def main():
+    from benchmarks import roofline
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline.main()
+    table = buf.getvalue()
+    path = os.path.join(HERE, "..", "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    start = text.index(marker)
+    end = text.index("\nReading the table:", start)
+    text = (text[:start + len(marker)] + "\n```\n" + table.rstrip()
+            + "\n```\n" + text[end:])
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"injected {len(table.splitlines())} lines into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Perf-hillclimb driver: lower one cell with ModelConfig overrides and log
+the roofline delta vs a named baseline record.
+
+    PYTHONPATH=src python -m benchmarks.perf_lower \
+        --arch jamba-1.5-large-398b --shape train_4k \
+        --set mamba_scan=assoc --tag jamba_assoc
+"""
+
+import argparse
+import ast
+import json
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="field=value ModelConfig override (repeatable)")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--baseline", default="",
+                    help="path of a baseline record to diff against")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    rec, _ = lower_cell(args.arch, args.shape, args.mesh == "multi",
+                        overrides=overrides)
+    rec["overrides"] = overrides
+    out = os.path.join(os.path.dirname(__file__), "results", "perf",
+                       args.tag + ".json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    rl = rec["roofline"]
+    print(f"[perf] {args.tag}: t_comp={rl['t_compute_s']:.3f} "
+          f"t_mem={rl['t_memory_s']:.3f} t_coll={rl['t_collective_s']:.3f} "
+          f"dom={rl['dominant']} frac={rl.get('roofline_fraction', 0):.5f}")
+    if args.baseline and os.path.exists(args.baseline):
+        base = json.load(open(args.baseline))["roofline"]
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+                  "roofline_fraction"):
+            if base.get(k):
+                print(f"  {k:18s} {base[k]:10.4f} -> {rl[k]:10.4f} "
+                      f"({rl[k] / base[k]:.3f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Roofline report: aggregates the dry-run records into the EXPERIMENTS.md
+§Roofline table (per arch x shape x mesh: three terms, dominant bottleneck,
+useful-compute ratio, roofline fraction + a one-line 'what moves it')."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+_MOVES = {
+    ("memory", "train"): "cut softmax/logit f32 traffic (flash-style "
+                         "attention, bf16 logits, more microbatching)",
+    ("memory", "prefill"): "chunked attention already on; next: fuse KV "
+                           "write + rope (Pallas), bf16 accumulators",
+    ("memory", "decode"): "KV cache streaming dominates: quantize KV to "
+                          "int8 or shrink replication of KV heads",
+    ("memory", "tcq"): "fuse window mask + gather into the banded-segsum "
+                       "kernel; bitpack edge-activity",
+    ("collective", "train"): "overlap FSDP all-gathers with compute; "
+                             "reduce-scatter grads; int8 compression",
+    ("collective", "decode"): "shrink the model-axis softmax combine "
+                              "(flash-decoding partials)",
+    ("collective", "tcq"): "rs_ag combine (bool alive all-gather) instead "
+                           "of dense psum",
+    ("compute", "train"): "already MXU-bound: raise MFU via larger "
+                          "microbatch or fused kernels",
+    ("compute", "tcq"): "narrow the one-hot band (smaller S_TILE) or more "
+                        "lanes per step",
+}
+
+
+def load() -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    rl = r["roofline"]
+    kind = r.get("kind", "?")
+    dom = rl["dominant"]
+    move = _MOVES.get((dom, "tcq" if kind == "tcq" else r["kind"]),
+                      _MOVES.get((dom, "train"), ""))
+    ratio = rl.get("useful_compute_ratio")
+    frac = rl.get("roofline_fraction")
+    name = r["arch"]
+    if r.get("combine"):
+        name += f"[{r['combine']}]"
+    return ("| {n} | {s} | {m} | {tc:.4f} | {tm:.4f} | {tx:.4f} | {d} | "
+            "{ur} | {rf} |").format(
+        n=name, s=r["shape"], m=r["mesh"],
+        tc=rl["t_compute_s"], tm=rl["t_memory_s"], tx=rl["t_collective_s"],
+        d=dom,
+        ur=f"{ratio:.2f}" if ratio else "-",
+        rf=f"{frac:.4f}" if frac else "-")
+
+
+def main():
+    recs = load()
+    ok = [r for r in recs if not r.get("failed") and not r.get("skipped")]
+    skipped = [r for r in recs if r.get("skipped")]
+    failed = [r for r in recs if r.get("failed")]
+    print("| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | "
+          "dominant | useful | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r.get("kind", ""), r["arch"],
+                                       r["shape"], r["mesh"])):
+        print(fmt_row(r))
+    print(f"\n{len(ok)} cells ok, {len(skipped)} skipped (recorded), "
+          f"{len(failed)} failed")
+    for r in skipped:
+        print(f"  skip: {r['arch']} x {r['shape']}: {r['reason'][:80]}")
+    for r in failed:
+        print(f"  FAIL: {r.get('arch')} x {r.get('shape')}")
+    # dominant-term census (what the perf pass should attack)
+    census: Dict[str, int] = {}
+    for r in ok:
+        census[r["roofline"]["dominant"]] = census.get(
+            r["roofline"]["dominant"], 0) + 1
+    print("\ndominant-term census:", census)
+    worst = sorted((r for r in ok if r["roofline"].get("roofline_fraction")),
+                   key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['arch']} x {r['shape']} x {r['mesh']}: "
+              f"{r['roofline']['roofline_fraction']:.5f} "
+              f"dom={r['roofline']['dominant']}")
+    coll = sorted(ok, key=lambda r: -r["roofline"]["t_collective_s"])[:5]
+    print("\nmost collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']} x {r['shape']} x {r['mesh']}"
+              f"{'[' + r['combine'] + ']' if r.get('combine') else ''}: "
+              f"t_coll={r['roofline']['t_collective_s']:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

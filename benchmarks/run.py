@@ -1,0 +1,106 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
+full JSON records under benchmarks/results/.  The dry-run / roofline tables
+are produced by ``python -m repro.launch.dryrun`` and
+``python -m benchmarks.roofline`` (they need the 512-device env and are kept
+out of this CPU-timing harness).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_distribution, bench_k, bench_memory,
+                            bench_pruning, bench_queries, bench_span,
+                            bench_wave)
+
+    print("name,us_per_call,derived")
+    failures = 0
+
+    def row(name, seconds, derived=""):
+        print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+    try:
+        for r in bench_queries.run():
+            tag = f"queries/{r['graph']}/q{r['id']}"
+            row(tag + "/otcd", r["t_otcd_s"],
+                f"results={r['n_results']}")
+            row(tag + "/otcd_wave", r["t_otcd_wave_s"],
+                f"steps<=cells={r['cells_evaluated_otcd']}")
+            row(tag + "/tcd", r["t_tcd_s"],
+                f"speedup_otcd={r['speedup_otcd_vs_tcd']:.1f}x")
+            row(tag + "/iphc_online", r["t_iphc_online_s"],
+                f"speedup_otcd={r['speedup_otcd_vs_iphc']:.1f}x")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        for r in bench_pruning.run():
+            row(f"pruning/{r['graph']}", 0.0,
+                f"pruned%={r['pct_total_pruned']:.1f} "
+                f"(por={r['pct_por']:.1f} pou={r['pct_pou']:.1f} "
+                f"pol={r['pct_pol']:.1f} empty={r['pct_empty']:.1f})")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        for r in bench_k.run():
+            row(f"impact_k/{r['graph']}/k{r['k']}", r["t_otcd_s"],
+                f"cores={r['n_cores']} cc={r['n_components']} "
+                f"tcd_s={r['t_tcd_s']:.3f}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        for r in bench_span.run():
+            row(f"impact_span/{r['graph']}/x{r['span_uts']}",
+                r["t_otcd_s"],
+                f"cells={r['cells_total']} cores={r['n_cores']} "
+                f"tcd_s={r['t_tcd_s']:.3f}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        for r in bench_memory.run():
+            row(f"memory/{r['graph']}", 0.0,
+                f"tel_bytes={r['tel_bytes']} "
+                f"bytes_per_edge={r['tel_bytes_per_edge']:.1f}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        for r in bench_distribution.run():
+            row(f"distribution/{r['graph']}", r["wall_s"],
+                f"cores={r['n_cores']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        for r in bench_wave.run():
+            if r["bench"] == "wave_width":
+                row(f"wave/width{r['wave']}", r["t_s"],
+                    f"device_steps={r['device_steps']}")
+            else:
+                row(f"wave/degree_{r['path']}", r["t_s"],
+                    f"iters={r['iters']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    if failures:
+        print(f"# {failures} bench module(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Dynamic temporal graph (paper §6.1 + §7.4 case-study flavor): stream
+edge batches into the TEL and watch a community grow across re-queries —
+the bursting-community analysis of the paper's Fig. 15.
+
+Run:  PYTHONPATH=src python examples/dynamic_graph.py
+"""
+
+import numpy as np
+
+from repro.core import TCQEngine
+from repro.graphs import EdgeStream, planted_cores
+
+
+def main():
+    g = planted_cores(num_vertices=80, k=3, n_cliques=5, clique_size=7,
+                      time_span=60, noise_edges=150, seed=13)
+    stream = EdgeStream()
+    print("streaming the graph in 5 arrival batches; querying after each\n")
+    prev_ttis = set()
+    for i, (u, v, t) in enumerate(EdgeStream.replay(g, 5)):
+        stream.push(u, v, t)
+        cur = stream.graph
+        eng = TCQEngine(cur)
+        res = eng.query(3, 1, 60)
+        new = set(c.tti for c in res.cores) - prev_ttis
+        prev_ttis |= new
+        print(f"batch {i+1}: |E|={cur.num_edges:5d} -> {len(res):3d} cores "
+              f"({len(new)} new)")
+        # growth analysis: nested cores = community expansion (Fig. 15)
+        chains = 0
+        by_tti = res.by_tti()
+        for c in res.cores:
+            for c2 in res.cores:
+                if (c2.tti[0] <= c.tti[0] and c.tti[1] <= c2.tti[1]
+                        and c.n_vertices < c2.n_vertices
+                        and set(c.vertices).issubset(set(c2.vertices))):
+                    chains += 1
+                    break
+        print(f"          {chains} cores are nested inside a larger, "
+              f"longer-lived core (growth chains)")
+    top = sorted(res.cores, key=lambda c: -c.n_vertices)[:3]
+    print("\nlargest communities at the end:")
+    for c in top:
+        print(f"  {c}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Qwen2 7B [arXiv:2407.10671] — GQA kv=4 with QKV bias."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18_944, vocab=152_064,
+    act="silu", glu=True, pos="rope", rope_theta=1_000_000.0, qkv_bias=True,
+    tie_embeddings=False,
+    max_seq=32_768,
+)

@@ -1,0 +1,17 @@
+"""The paper's contribution: scalable time-range k-core queries (TCQ).
+
+Public API:
+  TemporalGraph      — host-side ArrayTEL (build / dynamic append / ship)
+  TCQEngine          — compiled query engine for one graph
+  temporal_kcore_query — one-shot convenience wrapper
+  tcd / tcd_batch    — the TCD operation (truncate + frontier peel + TTI)
+  brute_force_query  — oracle
+  PHCIndex / iphc_query — the paper's baseline (Algorithm 1)
+"""
+
+from repro.core.baseline import PHCIndex, iphc_query  # noqa: F401
+from repro.core.graph import DeviceTEL, TemporalGraph  # noqa: F401
+from repro.core.oracle import brute_force_query, peel_window  # noqa: F401
+from repro.core.otcd import TCQEngine, temporal_kcore_query  # noqa: F401
+from repro.core.results import CoreResult, QueryStats, TCQResult  # noqa: F401
+from repro.core.tcd import TCDResult, coreness, tcd, tcd_batch  # noqa: F401

@@ -1,0 +1,77 @@
+"""Tiny interval-set utility for the OTCD pruning schedule.
+
+The OTCD schedule over a window with n distinct timestamps has n(n+1)/2
+cells; materializing it is quadratic.  Instead each row keeps a merged list
+of pruned column-index intervals — O(#prune triggers) memory, exactly the
+cells the paper's Figure 4b shades.
+"""
+
+from __future__ import annotations
+
+import bisect
+from typing import Iterable, List, Tuple
+
+
+class IntervalSet:
+    """Disjoint, sorted, inclusive integer intervals with point queries."""
+
+    def __init__(self, intervals: Iterable[Tuple[int, int]] = ()):  # noqa: D107
+        ivs = sorted((int(a), int(b)) for a, b in intervals if a <= b)
+        merged: List[Tuple[int, int]] = []
+        for a, b in ivs:
+            if merged and a <= merged[-1][1] + 1:
+                pa, pb = merged[-1]
+                merged[-1] = (pa, max(pb, b))
+            else:
+                merged.append((a, b))
+        self._ivs = merged
+        self._los = [a for a, _ in merged]
+
+    def add(self, lo: int, hi: int) -> int:
+        """Insert [lo, hi]; returns the number of NEWLY covered integers
+        (exact per-rule pruning accounting, paper Table 4)."""
+        if lo > hi:
+            return 0
+        new = (hi - lo + 1) - self.total_covered(lo, hi)
+        if new == 0 and self.covers(lo) and self.covers(hi):
+            return 0
+        i = bisect.bisect_left(self._los, lo)
+        # merge with neighbours
+        start = i
+        if start > 0 and self._ivs[start - 1][1] >= lo - 1:
+            start -= 1
+        end = start
+        a, b = lo, hi
+        while end < len(self._ivs) and self._ivs[end][0] <= hi + 1:
+            a = min(a, self._ivs[end][0])
+            b = max(b, self._ivs[end][1])
+            end += 1
+        self._ivs[start:end] = [(a, b)]
+        self._los = [x for x, _ in self._ivs]
+        return new
+
+    def covers(self, x: int) -> bool:
+        i = bisect.bisect_right(self._los, x) - 1
+        return i >= 0 and self._ivs[i][0] <= x <= self._ivs[i][1]
+
+    def highest_uncovered_leq(self, x: int):
+        """Largest y <= x not covered by any interval, or None."""
+        while True:
+            i = bisect.bisect_right(self._los, x) - 1
+            if i < 0 or x > self._ivs[i][1]:
+                return x
+            x = self._ivs[i][0] - 1
+            if x < 0:
+                return None
+
+    def total_covered(self, lo: int, hi: int) -> int:
+        """Number of covered integers within [lo, hi]."""
+        n = 0
+        for a, b in self._ivs:
+            a2, b2 = max(a, lo), min(b, hi)
+            if a2 <= b2:
+                n += b2 - a2 + 1
+        return n
+
+    def __repr__(self) -> str:
+        return f"IntervalSet({self._ivs})"

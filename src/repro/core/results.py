@@ -1,0 +1,84 @@
+"""Result containers for temporal k-core queries."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreResult:
+    """One distinct temporal k-core.
+
+    Identity is its TTI (paper Property 2: cores are identical iff their
+    tightest time intervals are equal, for a fixed k and graph).
+    """
+
+    k: int
+    tti: Tuple[int, int]
+    vertices: np.ndarray  # sorted vertex ids
+    n_edges: int
+
+    @property
+    def span(self) -> int:
+        return self.tti[1] - self.tti[0]
+
+    @property
+    def n_vertices(self) -> int:
+        return int(self.vertices.size)
+
+    def __repr__(self) -> str:  # compact for logs
+        return (f"Core(k={self.k}, tti=[{self.tti[0]},{self.tti[1]}], "
+                f"|V|={self.n_vertices}, |E|={self.n_edges})")
+
+
+@dataclasses.dataclass
+class QueryStats:
+    n_timestamps: int = 0
+    cells_total: int = 0          # n*(n+1)/2 schedule cells (unique-ts space)
+    cells_evaluated: int = 0      # TCD operations actually executed
+    cells_trivial: int = 0        # skipped host-side (provably empty)
+    duplicates: int = 0           # re-induced cores (0 for serial OTCD)
+    por_triggers: int = 0
+    pou_triggers: int = 0
+    pol_triggers: int = 0
+    pruned_por: int = 0           # cells pruned by each rule
+    pruned_pou: int = 0
+    pruned_pol: int = 0
+    pruned_empty: int = 0
+    device_steps: int = 0
+    wall_time_s: float = 0.0
+
+    @property
+    def pruned_total(self) -> int:
+        return self.pruned_por + self.pruned_pou + self.pruned_pol
+
+    def pruned_pct(self) -> float:
+        if self.cells_total == 0:
+            return 0.0
+        return 100.0 * self.pruned_total / self.cells_total
+
+
+@dataclasses.dataclass
+class TCQResult:
+    cores: List[CoreResult]
+    stats: QueryStats
+
+    def by_tti(self) -> Dict[Tuple[int, int], CoreResult]:
+        return {c.tti: c for c in self.cores}
+
+    def filter_span(self, min_span: Optional[int] = None,
+                    max_span: Optional[int] = None) -> "TCQResult":
+        """Paper §6.2 time-span constraint, applied on the fly or post-hoc."""
+        out = [c for c in self.cores
+               if (min_span is None or c.span >= min_span)
+               and (max_span is None or c.span <= max_span)]
+        return TCQResult(out, self.stats)
+
+    def top_n_shortest_span(self, n: int) -> List[CoreResult]:
+        return sorted(self.cores, key=lambda c: (c.span, c.tti))[:n]
+
+    def __len__(self) -> int:
+        return len(self.cores)

@@ -1,0 +1,95 @@
+"""Wave-native batched TCD: Q query cells peeled in lockstep, kernel-ready.
+
+`tcd_batch` (tcd.py) vmaps the scalar path; this module lays the data out
+the way the MXU wants it — values [E, Q] / [2P, Q] — so the two segment
+reductions become banded one-hot matmuls (the Pallas kernel), and the whole
+wave shares one fixpoint loop.  This is also the single-shard block of the
+distributed engine (distributed.py wraps it in shard_map with a cross-shard
+degree combine).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.graph import DeviceTEL, TemporalGraph
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class WaveResult(NamedTuple):
+    alive: jnp.ndarray    # [Q, V]
+    tti_lo: jnp.ndarray   # [Q]
+    tti_hi: jnp.ndarray   # [Q]
+    n_edges: jnp.ndarray  # [Q]
+    n_verts: jnp.ndarray  # [Q]
+    iters: jnp.ndarray    # scalar: fixpoint iterations of the wave
+
+
+def make_segsum_fns(graph: TemporalGraph, *, use_kernel: bool = False,
+                    interpret: Optional[bool] = None):
+    """(edges->pairs, halfpairs->vertices) segment-sum closures for a graph.
+
+    use_kernel=True routes through the Pallas banded kernel (interpret mode
+    on CPU); False uses jax.ops.segment_sum (XLA scatter path).
+    """
+    from repro.kernels.segdeg.ops import make_banded_segsum
+
+    tel_hp_src = np.sort(np.concatenate([graph.pair_u, graph.pair_v]))
+    seg_pair = make_banded_segsum(graph.pair_id, graph.num_pairs,
+                                  use_kernel=use_kernel, interpret=interpret)
+    seg_vert = make_banded_segsum(tel_hp_src, graph.num_vertices,
+                                  use_kernel=use_kernel, interpret=interpret)
+    return seg_pair, seg_vert
+
+
+def wave_degrees(tel: DeviceTEL, alive: jnp.ndarray, ts, te, h,
+                 *, num_vertices: int, seg_pair: Callable, seg_vert: Callable
+                 ) -> jnp.ndarray:
+    """alive: [Q, V]; ts/te: [Q].  Returns [Q, V] int32 degrees."""
+    win = (tel.t[None, :] >= ts[:, None]) & (tel.t[None, :] <= te[:, None])
+    ea = win & alive[:, tel.src] & alive[:, tel.dst]          # [Q, E]
+    paircnt = seg_pair(ea.T.astype(jnp.float32), tel.pair_id)  # [P, Q]
+    pairact = (paircnt >= h).astype(jnp.float32)
+    contrib = pairact[tel.hp_pair, :]                          # [2P, Q]
+    deg = seg_vert(contrib, tel.hp_src)                        # [V, Q]
+    return deg.T.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "seg_pair",
+                                             "seg_vert", "max_iters"))
+def tcd_wave(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
+             *, num_vertices: int, seg_pair, seg_vert,
+             max_iters: int = 0) -> WaveResult:
+    """Batched TCD to the fixpoint.  alive: [Q, V] warm-start supersets."""
+    deg_fn = functools.partial(wave_degrees, tel, num_vertices=num_vertices,
+                               seg_pair=seg_pair, seg_vert=seg_vert)
+
+    def cond(state):
+        _, changed, it = state
+        more = changed
+        if max_iters:
+            more = more & (it < max_iters)
+        return more
+
+    def body(state):
+        cur, _, it = state
+        deg = deg_fn(cur, ts, te, h)
+        new = cur & (deg >= k)
+        return new, jnp.any(new != cur), it + 1
+
+    alive, _, iters = lax.while_loop(
+        cond, body, (alive, jnp.bool_(True), jnp.int32(0)))
+    win = (tel.t[None, :] >= ts[:, None]) & (tel.t[None, :] <= te[:, None])
+    ea = win & alive[:, tel.src] & alive[:, tel.dst]
+    n_edges = jnp.sum(ea, axis=1, dtype=jnp.int32)
+    tti_lo = jnp.min(jnp.where(ea, tel.t[None, :], _I32_MAX), axis=1)
+    tti_hi = jnp.max(jnp.where(ea, tel.t[None, :], jnp.int32(-1)), axis=1)
+    n_verts = jnp.sum(alive, axis=1, dtype=jnp.int32)
+    return WaveResult(alive, tti_lo, tti_hi, n_edges, n_verts, iters)

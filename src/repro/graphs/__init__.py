@@ -1,0 +1,8 @@
+from repro.graphs.generators import (  # noqa: F401
+    erdos_temporal,
+    paper_style_example,
+    powerlaw_temporal,
+    planted_cores,
+)
+from repro.graphs.io import load_snap_edges, save_edges  # noqa: F401
+from repro.graphs.stream import EdgeStream  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the banded segment-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_segsum_ref(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                      num_segments: int) -> jnp.ndarray:
+    """values: [N, Q]; seg_ids: [N] sorted ascending (entries == num_segments
+    are padding and ignored).  Returns [num_segments, Q] with
+    out[s, q] = sum_{i: seg_ids[i] == s} values[i, q]."""
+    return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments,
+                               indices_are_sorted=True)

@@ -1,0 +1,17 @@
+"""Dispatcher for the SSM scan: Pallas on TPU, interpret on CPU tests,
+jnp reference otherwise."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def ssm_scan(log_a, bx, s0, *, use_kernel: bool = True, interpret=None):
+    if not use_kernel:
+        return ssm_scan_ref(log_a, bx, s0)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssm_scan_pallas(log_a, bx, s0, interpret=interpret)

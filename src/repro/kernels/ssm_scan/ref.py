@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the diagonal SSM scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(log_a: jnp.ndarray, bx: jnp.ndarray,
+                 s0: jnp.ndarray) -> jnp.ndarray:
+    """s_t = exp(log_a_t) * s_{t-1} + bx_t, returning all states.
+
+    log_a/bx: [B, S, F] (<= 0 decays); s0: [B, F].  Out: [B, S, F]."""
+    def step(carry, xs):
+        la, b = xs
+        new = jnp.exp(la) * carry + b
+        return new, new
+
+    _, ys = jax.lax.scan(step, s0, (log_a.swapaxes(0, 1),
+                                    bx.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,144 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = sum over collective ops of operand_bytes * ring_factor
+               / (links * ICI_BW)
+
+``cost_analysis()`` on a GSPMD-partitioned executable reports *per-device*
+flops/bytes (the partitioned module), so no further division by chip count
+is applied; the methodology note in EXPERIMENTS.md records this.
+Collective bytes are parsed from the post-SPMD HLO text; ring factors:
+all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+collective-permute 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+ICI_LINKS = 2            # links per axis direction usable concurrently (2D torus)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_SZ_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: int
+    group_size: int
+    line: str = ""
+
+    @property
+    def ring_factor(self) -> float:
+        g = max(self.group_size, 1)
+        if self.kind == "all-reduce":
+            return 2.0 * (g - 1) / g
+        if self.kind == "collective-permute":
+            return 1.0
+        return (g - 1) / g
+
+    @property
+    def wire_bytes(self) -> float:
+        return self.operand_bytes * self.ring_factor
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"\b(" + "|".join(_COLL_KINDS) + r")(-start)?\(", s)
+        if not m or "-done" in s.split("=")[0]:
+            continue
+        kind = m.group(1)
+        # shapes: first match = output (LHS), the rest are operand types
+        shapes = _SHAPE_RE.findall(s)
+        if not shapes:
+            continue
+        paren = s[m.end():]
+        operand_shapes = _SHAPE_RE.findall(paren)
+        if not operand_shapes:  # tuple output form: use output as estimate
+            operand_shapes = shapes[:1]
+        ob = sum(_shape_bytes(d, dims) for d, dims in operand_shapes)
+        gm = _GROUPS_RE.search(s)
+        if gm:
+            gsz = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gm2 = _GROUPS_SZ_RE.search(s)
+            gsz = int(gm2.group(2)) if gm2 else 1
+        out.append(CollectiveOp(kind, ob, gsz, s[:160]))
+    return out
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    summ: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        d = summ.setdefault(op.kind, {"count": 0, "operand_bytes": 0.0,
+                                      "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += op.operand_bytes
+        d["wire_bytes"] += op.wire_bytes
+    return summ
+
+
+def roofline_terms(cost: Optional[dict], ops: List[CollectiveOp],
+                   model_flops_per_device: float = 0.0) -> Dict[str, float]:
+    cost = cost or {}
+    flops = float(cost.get("flops", 0.0))
+    # XLA:CPU reports bytes accessed via 'bytes accessed{}' keys
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    if not bytes_acc:
+        bytes_acc = sum(float(v) for k, v in cost.items()
+                        if k.startswith("bytes accessed"))
+    wire = sum(op.wire_bytes for op in ops)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = wire / (ICI_LINKS * ICI_BW)
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    out = {
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_wire_bytes_per_device": wire,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "bound_step_time_s": max(t_compute, t_memory, t_coll),
+    }
+    if model_flops_per_device:
+        out["model_flops_per_device"] = model_flops_per_device
+        out["useful_compute_ratio"] = (
+            model_flops_per_device / flops if flops else 0.0)
+        peak_time = model_flops_per_device / PEAK_FLOPS
+        out["roofline_fraction"] = (
+            peak_time / out["bound_step_time_s"]
+            if out["bound_step_time_s"] else 0.0)
+    return out

@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE two lines below must run before any other import (jax locks the device
+count at first initialization):
+"""
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, get_smoke_config, list_archs  # noqa: E402
+from repro.launch import analysis  # noqa: E402
+from repro.launch import shapes as S  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def _chips(mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, smoke: bool = False,
+               overrides: dict = None):
+    """Lower + compile one cell; returns (record, compiled).
+    overrides: ModelConfig field replacements (perf hillclimb A/Bs)."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    cell = S.SHAPES[shape]
+    if smoke:
+        cell = S.ShapeCell(cell.name, min(cell.seq, 128),
+                           min(cell.batch, 8), cell.kind)
+    ok, why = S.cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": True,
+                "reason": why}, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_abs, batch_ps = S.batch_specs(cfg, cell, mesh)
+    batch_ns = steps.ns(mesh, batch_ps)
+    t0 = time.perf_counter()
+    with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
+            else mesh:
+        if cell.kind == "train":
+            n_micro = S.microbatches(cfg, cell, mesh)
+            _, jit_with, p_ns, o_ns, opt = steps.build_train_step(
+                cfg, mesh, n_micro)
+            from repro.models import transformer as T
+
+            params_abs = T.abstract_params(cfg)
+            opt_abs = opt.init_abstract(params_abs)
+            jitted = jit_with(batch_ns)
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif cell.kind == "prefill":
+            _, jit_with, p_ns = steps.build_prefill_step(cfg, mesh, cell)
+            from repro.models import transformer as T
+
+            params_abs = T.abstract_params(cfg)
+            jitted = jit_with(batch_ns)
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            _, jit_with, p_ns, cache_abs, c_ns = steps.build_serve_step(
+                cfg, mesh, cell)
+            from repro.models import transformer as T
+
+            params_abs = T.abstract_params(cfg)
+            jitted = jit_with(batch_ns)
+            lowered = jitted.lower(params_abs, cache_abs, batch_abs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # some backends lack memory analysis
+        mem_rec = {"error": str(e)}
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import HLOCost
+
+    hc = HLOCost(hlo)
+    chips = _chips(mesh)
+    tokens = cell.batch * (cell.seq if cell.kind != "decode" else 1)
+    # MODEL_FLOPS = 6·N·D exactly (the brief's definition): it already
+    # bakes in the fwd+bwd convention, so train gets no extra factor and
+    # inference cells are EXPECTED to show useful_compute_ratio ≈ 3
+    # (forward-only does a third of 6·N·D).
+    mf = cfg.model_flops(tokens)
+    terms = analysis.roofline_terms(
+        {"flops": hc.flops, "bytes accessed": hc.bytes}, hc.collective_ops(),
+        model_flops_per_device=mf / chips)
+    # raw XLA numbers kept as a cross-check (they omit loop trip counts)
+    terms["xla_cost_analysis_flops"] = float(cost.get("flops", 0.0))
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "smoke": smoke,
+        "kind": cell.kind, "seq": cell.seq, "batch": cell.batch,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "optimizer": cfg.optimizer,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_rec,
+        "collectives": hc.collective_summary(),
+        "roofline": terms,
+    }
+    return record, compiled
+
+
+def lower_tcq_cell(name: str, multi_pod: bool, combine: str = "rs_ag",
+                   wave: int = None):
+    """Lower one distributed-TCQ engine cell (single peel iteration = the
+    roofline unit; iteration counts come from the CPU benchmarks)."""
+    import dataclasses
+
+    from repro.configs import get_tcq_config
+    from repro.core import distributed as D
+
+    cfg = get_tcq_config(name)
+    if wave:
+        cfg = dataclasses.replace(cfg, wave=wave)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes["model"]
+    tel = D.abstract_sharded_tel(cfg.num_vertices, cfg.num_edges,
+                                 cfg.num_pairs, m)
+    sh = D.wave_shardings(mesh, tel.num_vertices, m)
+    q = cfg.wave
+    alive = jax.ShapeDtypeStruct((q, tel.num_vertices), jnp_bool())
+    lane = jax.ShapeDtypeStruct((q,), jnp_i32())
+    scalar = jax.ShapeDtypeStruct((), jnp_i32())
+    step = build_tcq_step(mesh, tel, combine)
+    t0 = time.time()
+    lowered = jax.jit(step, in_shardings=(
+        (sh["edges"],) * 6 + (sh["alive"], sh["lane"], sh["lane"],
+                              sh["scalar"], sh["scalar"]))).lower(
+        *( (tel.src, tel.dst, tel.t, tel.pair_local, tel.hp_src,
+            tel.hp_pair) + (alive, lane, lane, scalar, scalar)))
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    from repro.launch.hlo_cost import HLOCost
+
+    hc = HLOCost(compiled.as_text())
+    e_s = tel.src.shape[1]
+    p_s = tel.num_pairs_shard
+    q_loc = max(1, q // (mesh.devices.size // m))
+    v = tel.num_vertices
+    # intrinsic per-iteration streaming of the algorithm (per device)
+    useful = (e_s * 16                      # edge arrays read once
+              + 2 * q_loc * e_s * 1        # edge-activity bools r/w
+              + 2 * p_s * q_loc * 4        # pair counts w+r
+              + 2 * 2 * p_s * q_loc * 4    # half-pair contributions
+              + v * q_loc * 4)             # degree write
+    terms = analysis.roofline_terms(
+        {"flops": hc.flops, "bytes accessed": hc.bytes},
+        hc.collective_ops())
+    terms["useful_bytes_per_device"] = useful
+    terms["min_traffic_fraction"] = (
+        useful / analysis.HBM_BW / terms["bound_step_time_s"]
+        if terms["bound_step_time_s"] else 0.0)
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {"temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                   "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                             None)}
+    except Exception as e:  # pragma: no cover
+        mem_rec = {"error": str(e)}
+    return {
+        "arch": name, "shape": f"wave{q}", "kind": "tcq",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(mesh.devices.size), "combine": combine,
+        "V": cfg.num_vertices, "E": cfg.num_edges, "P": cfg.num_pairs,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_rec, "collectives": hc.collective_summary(),
+        "roofline": terms,
+    }
+
+
+def jnp_bool():
+    import jax.numpy as jnp
+
+    return jnp.bool_
+
+
+def jnp_i32():
+    import jax.numpy as jnp
+
+    return jnp.int32
+
+
+def build_tcq_step(mesh, tel, combine):
+    from repro.core import distributed as D
+
+    return D.build_wave_step(mesh, num_vertices=tel.num_vertices,
+                             combine=combine, p_s=tel.num_pairs_shard,
+                             single_iteration=True)
+
+
+def run_tcq_cells(names, meshes, combines=("psum", "rs_ag"),
+                  out_dir=RESULTS_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for name in names:
+        for mesh_name in meshes:
+            for combine in combines:
+                multi = mesh_name == "multi"
+                tag = (f"{name}__wave__{'2x16x16' if multi else '16x16'}"
+                       f"__{combine}")
+                path = os.path.join(out_dir, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] cached {tag}")
+                    with open(path) as f:
+                        results.append(json.load(f))
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = lower_tcq_cell(name, multi, combine)
+                except Exception:
+                    rec = {"arch": name, "failed": True,
+                           "error": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                results.append(rec)
+                status = ("FAIL" if rec.get("failed") else
+                          f"ok ({rec['compile_s']}s, "
+                          f"dom={rec['roofline']['dominant']})")
+                print(f"[dryrun] {tag}: {status}", flush=True)
+    return results
+
+
+def run_cells(archs, shapes, meshes, smoke=False, out_dir=RESULTS_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                multi = mesh_name == "multi"
+                tag = f"{arch}__{shape}__{'2x16x16' if multi else '16x16'}"
+                path = os.path.join(out_dir, tag + ".json")
+                if os.path.exists(path) and not smoke:
+                    print(f"[dryrun] cached {tag}")
+                    with open(path) as f:
+                        results.append(json.load(f))
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec, _ = lower_cell(arch, shape, multi, smoke)
+                except Exception:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "failed": True,
+                           "error": traceback.format_exc()[-2000:]}
+                if not smoke:
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                results.append(rec)
+                status = ("SKIP" if rec.get("skipped") else
+                          "FAIL" if rec.get("failed") else
+                          f"ok ({rec['compile_s']}s compile, "
+                          f"dom={rec['roofline']['dominant']})")
+                print(f"[dryrun] {tag}: {status}", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI self-test)")
+    ap.add_argument("--tcq", default="",
+                    help="TCQ engine configs ('all' or comma list); "
+                         "replaces the LM sweep when set")
+    ap.add_argument("--combine", default="psum,rs_ag")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    if args.tcq:
+        from repro.configs import list_tcq_configs
+
+        names = (list_tcq_configs() if args.tcq == "all"
+                 else args.tcq.split(","))
+        results = run_tcq_cells(names, meshes,
+                                combines=tuple(args.combine.split(",")),
+                                out_dir=args.out)
+    else:
+        archs = list_archs() if args.arch == "all" else args.arch.split(",")
+        shapes = (list(S.SHAPES) if args.shape == "all"
+                  else args.shape.split(","))
+        results = run_cells(archs, shapes, meshes, smoke=args.smoke,
+                            out_dir=args.out)
+    n_ok = sum(1 for r in results if not r.get("failed")
+               and not r.get("skipped"))
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    n_fail = sum(1 for r in results if r.get("failed"))
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped (recorded), "
+          f"{n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

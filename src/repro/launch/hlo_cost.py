@@ -1,0 +1,397 @@
+"""HLO-text cost model with control-flow trip-count multipliers.
+
+``compiled.cost_analysis()`` counts each while/scan body ONCE, which
+undercounts a scanned-layer transformer by (groups x microbatches) — the
+first dry-runs reported roofline fractions > 1, which is how this module
+came to exist.  It walks the post-SPMD HLO text instead:
+
+  * computations are parsed into blocks; ``while`` ops contribute their body
+    cost multiplied by the trip count recovered from the loop condition's
+    comparison constant (scan/fori loops lower to counted whiles);
+  * matmul FLOPs: 2 * prod(output dims) * prod(contracting dims) per ``dot``;
+  * HBM traffic: sum of (operand + output) bytes over top-level fusions /
+    dots / copies / collectives — post-fusion, each op's operands/outputs
+    are exactly the buffers that cross HBM;
+  * collectives: operand bytes, replica-group size, and ring factor, also
+    trip-multiplied.
+
+All quantities are per-device (the post-SPMD module is the per-device
+program).  Validated against analytic 6·N·D in tests/test_dryrun.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"=\s*(?:\([^)]*\)|[a-z][a-z0-9]*\[[^\]]*\]\S*)\s*"
+                    r"([a-z][a-z0-9\-]*)\(")
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_SZ_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# opcodes whose operands/outputs do NOT move HBM bytes
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "custom-call", "partition-id",
+             "replica-id", "while", "conditional", "call"}
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    operand_bytes: float
+    group_size: int
+
+    @property
+    def ring_factor(self) -> float:
+        g = max(self.group_size, 1)
+        if self.kind == "all-reduce":
+            return 2.0 * (g - 1) / g
+        if self.kind == "collective-permute":
+            return 1.0
+        return (g - 1) / g
+
+    @property
+    def wire_bytes(self) -> float:
+        return self.operand_bytes * self.ring_factor
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[Tuple[str, int], Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    # (called_computation, multiplier, kind) edges; kind "fusion" bodies are
+    # in-register — they contribute flops but never HBM bytes
+    edges: List[Tuple[str, object, str]] = dataclasses.field(
+        default_factory=list)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _line_shapes(line: str) -> List[Tuple[str, str]]:
+    return _SHAPE_RE.findall(line)
+
+
+def _line_bytes(line: str) -> float:
+    return float(sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+                     for dt, dims in _line_shapes(line)))
+
+
+def _dot_flops(line: str) -> float:
+    m = _CONTRACT_RE.search(line)
+    shapes = _line_shapes(line)
+    if not shapes:
+        return 0.0
+    # output shape = first; lhs operand = second shape in the line
+    out = _shape_elems(shapes[0][1])
+    if m is None or len(shapes) < 2:
+        return 2.0 * out
+    lhs_dims = [int(x) for x in shapes[1][1].split(",") if x]
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    k = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    return 2.0 * out * k
+
+
+def _trip_count(cond_text: str) -> float:
+    """Counted loops compare the induction variable against a constant."""
+    consts = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_text)]
+    return float(max(consts)) if consts else 1.0
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    # header: "[ENTRY ]%name (params...) -> type {"  — params may contain
+    # nested parens (tuple types), so only anchor on name + "->" + "{".
+    entry_marker = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = entry_marker.match(s.strip())
+            if m and s.strip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if s.strip() == "}":
+                cur = None
+            elif cur is not None:
+                comps[cur].append(s)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"(\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)")
+
+
+def _shapes_bytes(shape_text: str) -> float:
+    return float(sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+                     for dt, dims in _SHAPE_RE.findall(shape_text)))
+
+
+def analyze_computation(text: str, shape_table: Dict[str, str]) -> CompCost:
+    """shape_table: global op-name -> output type text (operands in this HLO
+    dialect are bare %names, so shapes are resolved through definitions)."""
+    local: Dict[str, str] = {}
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            local[m.group(1)] = m.group(2)
+
+    def resolve(name: str) -> str:
+        return local.get(name) or shape_table.get(name, "")
+
+    def operand_bytes_of(s: str, om_end: int) -> float:
+        paren = s[om_end:]
+        depth = 1
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    paren = paren[:i]
+                    break
+        inline = _SHAPE_RE.findall(paren)
+        if inline:
+            return float(sum(_shape_elems(d) * _DTYPE_BYTES.get(t, 4)
+                             for t, d in inline))
+        names = re.findall(r"%([\w\.\-]+)", paren)
+        return float(sum(_shapes_bytes(resolve(n)) for n in names))
+
+    c = CompCost()
+    for line in text.splitlines():
+        s = line.strip()
+        om = _OP_RE.search(s)
+        if not om:
+            continue
+        op = om.group(1)
+        if op == "while":
+            bm = _BODY_RE.search(s)
+            cm = _COND_RE.search(s)
+            # XLA records the static trip count of counted loops directly
+            tm = re.search(r'known_trip_count[^}]*"n":"(\d+)"', s)
+            if bm:
+                if tm:
+                    c.edges.append((bm.group(1), float(tm.group(1)), "loop"))
+                else:
+                    c.edges.append((bm.group(1), ("__cond__", cm.group(1))
+                                    if cm else 1.0, "loop"))
+            continue
+        if op == "fusion":
+            fm = _CALLED_RE.search(s)
+            if fm:
+                c.edges.append((fm.group(1), 1.0, "fusion"))
+            continue  # bytes come from the body-aware fusion model
+        if op == "call":
+            fm = _CALLED_RE.search(s)
+            if fm:
+                c.edges.append((fm.group(1), 1.0, "call"))
+        if op == "conditional":
+            brm = _BRANCHES_RE.search(s)
+            if brm:
+                for b in brm.group(1).split(","):
+                    c.edges.append((b.strip().lstrip("%"), 1.0, "call"))
+        if op.startswith("all-") or op.startswith("reduce-scatter") or \
+                op.startswith("collective-permute"):
+            base = op.replace("-start", "")
+            if base in _COLL_KINDS:
+                ob = operand_bytes_of(s, om.end())
+                gm = _GROUPS_RE.search(s)
+                if gm:
+                    gsz = len([x for x in gm.group(1).split(",")
+                               if x.strip() != ""])
+                else:
+                    gm2 = _GROUPS_SZ_RE.search(s)
+                    gsz = int(gm2.group(2)) if gm2 else 1
+                key = (base, gsz)
+                d = c.collectives.setdefault(
+                    key, {"count": 0.0, "operand_bytes": 0.0})
+                d["count"] += 1
+                d["operand_bytes"] += ob
+                dm = _DEF_RE.match(line)
+                c.bytes += (_shapes_bytes(dm.group(2)) if dm else 0.0) + ob
+            continue
+        if op == "dot":
+            dm = _DEF_RE.match(line)
+            out_text = dm.group(2) if dm else ""
+            out = float(sum(_shape_elems(d)
+                            for _, d in _SHAPE_RE.findall(out_text)))
+            cm = _CONTRACT_RE.search(s)
+            lhs_name = re.search(r"dot\(\s*%([\w\.\-]+)", s)
+            k = 1.0
+            if cm and lhs_name:
+                lhs_shapes = _SHAPE_RE.findall(resolve(lhs_name.group(1)))
+                if lhs_shapes:
+                    lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",")
+                                if x]
+                    for cd in [int(x) for x in cm.group(1).split(",") if x]:
+                        if cd < len(lhs_dims):
+                            k *= lhs_dims[cd]
+            c.flops += 2.0 * out * k
+            c.bytes += (_shapes_bytes(out_text)
+                        + operand_bytes_of(s, om.end()))
+            continue
+        if op in _FREE_OPS or op.endswith("-done"):
+            continue
+        dm = _DEF_RE.match(line)
+        out_bytes = _shapes_bytes(dm.group(2)) if dm else 0.0
+        if op in ("dynamic-slice", "gather", "slice"):
+            # reads only the sliced/gathered region, not the whole operand
+            c.bytes += 2.0 * out_bytes
+        elif op in ("dynamic-update-slice", "scatter"):
+            names = re.findall(r"%([\w\.\-]+)", s[om.end():])
+            upd = _shapes_bytes(resolve(names[1])) if len(names) > 1 else 0.0
+            c.bytes += 2.0 * upd
+        else:
+            c.bytes += out_bytes + operand_bytes_of(s, om.end())
+    return c
+
+
+class HLOCost:
+    def __init__(self, hlo_text: str):
+        self.comps = split_computations(hlo_text)
+        shape_table: Dict[str, str] = {}
+        for t in self.comps.values():
+            for line in t.splitlines():
+                m = _DEF_RE.match(line)
+                if m:
+                    shape_table.setdefault(m.group(1), m.group(2))
+        self.costs = {name: analyze_computation(t, shape_table)
+                      for name, t in self.comps.items()}
+        self._memo: Dict[str, Tuple[float, float, Dict]] = {}
+        self._fusion_memo: Dict[str, float] = {}
+        # entry = the computation marked ENTRY
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+        self.entry = m.group(1) if m else next(iter(self.comps))
+        f, b, coll = self._total(self.entry, set())
+        self.flops = f
+        self.bytes = b
+        self.collectives = coll
+
+    def _resolve_trips(self, edge_mult) -> float:
+        if isinstance(edge_mult, tuple) and edge_mult[0] == "__cond__":
+            cond = edge_mult[1]
+            return _trip_count(self.comps.get(cond, ""))
+        return float(edge_mult)
+
+    def _total(self, name: str, stack) -> Tuple[float, float, Dict]:
+        if name in self._memo:
+            return self._memo[name]
+        if name not in self.costs or name in stack:
+            return 0.0, 0.0, {}
+        stack = stack | {name}
+        c = self.costs[name]
+        f, b = c.flops, c.bytes
+        coll: Dict[Tuple[str, int], Dict[str, float]] = {
+            k: dict(v) for k, v in c.collectives.items()}
+        for child, mult, kind in c.edges:
+            m = self._resolve_trips(mult)
+            cf, cb, cc = self._total(child, stack)
+            f += m * cf
+            if kind == "fusion":
+                # fused bodies live in registers; HBM traffic is the
+                # body-aware param/output model (slice-aware)
+                b += m * self._fusion_traffic(child)
+            else:
+                b += m * cb
+            for k, v in cc.items():
+                d = coll.setdefault(k, {"count": 0.0, "operand_bytes": 0.0})
+                d["count"] += m * v["count"]
+                d["operand_bytes"] += m * v["operand_bytes"]
+        self._memo[name] = (f, b, coll)
+        return f, b, coll
+
+    def _fusion_traffic(self, name: str) -> float:
+        """HBM traffic of one fused kernel: each parameter is read in full
+        UNLESS it is only consumed through dynamic-slice/gather (then only
+        the slice moves); a dynamic-update-slice root writes only the
+        update extent (the big buffer is aliased in place)."""
+        if name in self._fusion_memo:
+            return self._fusion_memo[name]
+        text = self.comps.get(name, "")
+        params: Dict[str, str] = {}
+        uses: Dict[str, List[str]] = {}
+        defs: Dict[str, str] = {}
+        lines = text.splitlines()
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            defs[dm.group(1)] = dm.group(2)
+            om = _OP_RE.search(line)
+            op = om.group(1) if om else ""
+            if op == "parameter":
+                params[dm.group(1)] = dm.group(2)
+            elif om:
+                for ref in re.findall(r"%([\w\.\-]+)", line[om.end():]):
+                    uses.setdefault(ref, []).append(
+                        (op, dm.group(2)))
+        traffic = 0.0
+        for pname, ptype in params.items():
+            consumers = uses.get(pname, [])
+            if consumers and all(op in ("dynamic-slice", "gather", "slice")
+                                 for op, _ in consumers):
+                traffic += sum(_shapes_bytes(otype)
+                               for _, otype in consumers)
+            else:
+                traffic += _shapes_bytes(ptype)
+        root_line = next((ln for ln in lines
+                          if ln.strip().startswith("ROOT")), "")
+        rom = _OP_RE.search(root_line)
+        root_op = rom.group(1) if rom else ""
+        rdm = _DEF_RE.match(root_line.strip()) if root_line else None
+        out_bytes = _shapes_bytes(rdm.group(2)) if rdm else 0.0
+        if root_op in ("dynamic-update-slice", "scatter") and rom:
+            opnames = re.findall(r"%([\w\.\-]+)", root_line[rom.end():])
+            if len(opnames) > 1:
+                upd = defs.get(opnames[1]) or params.get(opnames[1], "")
+                out_bytes = _shapes_bytes(upd)
+        self._fusion_memo[name] = traffic + out_bytes
+        return self._fusion_memo[name]
+
+    # ------------------------------------------------------------- summaries
+    def collective_ops(self) -> List[Collective]:
+        out = []
+        for (kind, gsz), v in self.collectives.items():
+            out.append(Collective(kind, v["operand_bytes"], gsz))
+        return out
+
+    def collective_summary(self) -> Dict[str, Dict[str, float]]:
+        summ: Dict[str, Dict[str, float]] = {}
+        for (kind, gsz), v in self.collectives.items():
+            c = Collective(kind, v["operand_bytes"], gsz)
+            d = summ.setdefault(kind, {"count": 0.0, "operand_bytes": 0.0,
+                                       "wire_bytes": 0.0})
+            d["count"] += v["count"]
+            d["operand_bytes"] += v["operand_bytes"]
+            d["wire_bytes"] += c.wire_bytes
+        return summ
+
+    def wire_bytes(self) -> float:
+        return sum(c.wire_bytes for c in self.collective_ops())

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — `pod` is the
+outermost (DCN-connected) axis and carries pure data parallelism plus the
+query-wave axis of the TCQ engine.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

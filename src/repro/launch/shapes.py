@@ -1,0 +1,118 @@
+"""Assigned input shapes and per-(arch x shape) input specs.
+
+Four LM shape cells (the brief's assignment):
+    train_4k     seq 4096,    global batch 256   -> train_step
+    prefill_32k  seq 32768,   global batch 32    -> prefill_step
+    decode_32k   seq 32768 KV, global batch 128  -> serve_step (1 new token)
+    long_500k    seq 524288 KV, global batch 1   -> serve_step; only for
+                 sub-quadratic archs (SSM/hybrid) — skips recorded per config.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) + PartitionSpecs for every input of the lowered step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.launch.mesh import dp_axes
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention architecture: 500k dense decode is "
+                       "the quadratic regime this cell excludes (DESIGN.md "
+                       "§Arch-applicability)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """(abstract_batch, batch_pspecs) for the model inputs of one cell."""
+    dp = dp_axes(mesh)
+    b = cell.batch
+    s = 1 if cell.kind == "decode" else cell.seq
+    dpb = dp if b % max(1, _axsize(mesh, dp)) == 0 else None
+    bspec = dpb if b > 1 else None
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        specs["embeds"] = PS(bspec, None, None)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        specs["tokens"] = PS(bspec, None)
+    if cfg.encoder_layers and cell.kind != "decode":
+        batch["enc_embeds"] = _sds((b, cell.seq, cfg.d_model), jnp.bfloat16)
+        specs["enc_embeds"] = PS(bspec, None, None)
+    if cfg.pos == "mrope":
+        pos_shape = (3, b, s)
+        batch["positions"] = _sds(pos_shape, jnp.int32)
+        specs["positions"] = PS(None, bspec, None)
+    elif cell.kind == "decode":
+        batch["positions"] = _sds((b, s), jnp.int32)
+        specs["positions"] = PS(bspec, None)
+    if cell.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+        specs["labels"] = PS(bspec, None)
+    if cell.kind == "decode":
+        batch["cache_index"] = _sds((), jnp.int32)
+        specs["cache_index"] = PS()
+    return batch, specs
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    s_enc = cell.seq if cfg.encoder_layers else None
+    abstract = T.init_cache(cfg, cell.batch, cell.seq, s_enc, abstract=True)
+    pspecs = T.cache_pspecs(cfg, mesh, cell.batch, cell.seq, s_enc)
+    return abstract, pspecs
+
+
+def _axsize(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def microbatches(cfg: ModelConfig, cell: ShapeCell, mesh) -> int:
+    """Gradient-accumulation factor: bound live activation memory to roughly
+    one sequence per data shard per microbatch for the big configs."""
+    if cell.kind != "train":
+        return 1
+    dp = _axsize(mesh, dp_axes(mesh))
+    per_shard = max(1, cell.batch // dp)
+    if cfg.n_micro_override:
+        return min(per_shard, cfg.n_micro_override)
+    if cfg.param_count() > 3e10:
+        return min(per_shard, 8)
+    if cfg.param_count() > 5e9:
+        return min(per_shard, 2)
+    return 1

@@ -1,0 +1,151 @@
+"""Jitted step builders: train (grad-accum + optimizer), prefill, decode.
+
+All shardings are explicit NamedShardings derived from the config's logical
+axes; every builder works on any (data, model) / (pod, data, model) mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.launch import shapes as S
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+
+
+def ns(mesh, pspec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def _split_micro(batch, n_micro):
+    def split(x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (n_micro,))
+        if x.shape[0] == 3 and x.ndim == 3:  # mrope positions (3,B,S)
+            return x.reshape(3, n_micro, -1, *x.shape[2:]).swapaxes(0, 1)
+        return x.reshape(n_micro, -1, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(cfg, mesh, n_micro: int = 1, lr: float = 3e-4):
+    """Returns (jitted_step, param_shardings, opt_shardings, batch builder).
+
+    step(params, opt_state, batch) -> (params, opt_state, metrics).
+    Gradient accumulation over n_micro microbatches via lax.scan bounds the
+    live activation memory of the largest configs.
+    """
+    from repro.launch.mesh import dp_axes
+
+    opt = make_optimizer(cfg, lr=lr)
+    p_spec = T.param_pspecs(cfg, mesh)
+    p_ns = ns(mesh, p_spec)
+    o_ns = ns(mesh, opt.state_pspecs(p_spec))
+    act_ns = NamedSharding(mesh, PS(dp_axes(mesh), None, None))
+
+    def loss_of(params, mb):
+        loss, metrics = T.loss_fn(cfg, params, mb, act_sharding=act_ns)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        if n_micro > 1:
+            micro = _split_micro(batch, n_micro)
+
+            def acc_fn(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32),
+                                 gsum)
+            loss = lsum / n_micro
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    metric_ns = {"loss": NamedSharding(mesh, PS()),
+                 "grad_norm": NamedSharding(mesh, PS())}
+
+    def jit_with(batch_ns):
+        return jax.jit(step,
+                       in_shardings=(p_ns, o_ns, batch_ns),
+                       out_shardings=(p_ns, o_ns, metric_ns),
+                       donate_argnums=(0, 1))
+
+    return step, jit_with, p_ns, o_ns, opt
+
+
+def _bspec(mesh, batch: int):
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    return dp if batch > 1 and batch % S._axsize(mesh, dp) == 0 else None
+
+
+def build_prefill_step(cfg, mesh, cell):
+    """step(params, batch) -> (last_logits, cache)."""
+    p_ns = ns(mesh, T.param_pspecs(cfg, mesh))
+    cache_abs, cache_ps = S.cache_specs(cfg, cell, mesh)
+    bspec = _bspec(mesh, cell.batch)
+    act_ns = NamedSharding(mesh, PS(bspec, None, None))
+
+    def step(params, batch):
+        cache = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype),
+                             cache_abs)
+        hidden, _, cache = T.forward(cfg, params, batch, mode="prefill",
+                                     cache=cache, act_sharding=act_ns)
+        logits = T.logits_from_hidden(cfg, params, hidden[:, -1:, :])
+        return logits, cache
+
+    logits_ns = NamedSharding(mesh, PS(bspec, None, "model"))
+
+    def jit_with(batch_ns):
+        return jax.jit(step, in_shardings=(p_ns, batch_ns),
+                       out_shardings=(logits_ns, ns(mesh, cache_ps)))
+
+    return step, jit_with, p_ns
+
+
+def build_serve_step(cfg, mesh, cell):
+    """step(params, cache, batch) -> (next_token, cache).  One decode token
+    against a KV/state cache of cell.seq."""
+    from repro.launch.mesh import dp_axes
+
+    p_ns = ns(mesh, T.param_pspecs(cfg, mesh))
+    cache_abs, cache_ps = S.cache_specs(cfg, cell, mesh)
+    c_ns = ns(mesh, cache_ps)
+    bspec = _bspec(mesh, cell.batch)
+    act_ns = NamedSharding(mesh, PS(bspec, None, None))
+
+    def step(params, cache, batch):
+        hidden, _, cache = T.forward(cfg, params, batch, mode="decode",
+                                     cache=cache, act_sharding=act_ns)
+        logits = T.logits_from_hidden(cfg, params, hidden)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+    tok_ns = NamedSharding(mesh, PS(bspec, None))
+
+    def jit_with(batch_ns):
+        return jax.jit(step, in_shardings=(p_ns, c_ns, batch_ns),
+                       out_shardings=(tok_ns, c_ns),
+                       donate_argnums=(1,))
+
+    return step, jit_with, p_ns, cache_abs, c_ns

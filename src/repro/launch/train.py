@@ -1,0 +1,58 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --steps 50 \
+        [--smoke] [--fail-at 20] [--microbatches 4] [--ckpt DIR]
+
+On this CPU container --smoke (reduced config, host mesh) is the runnable
+path; without it the launcher targets the production 16x16 mesh (real TPU
+slices: one process per host, jax.distributed.initialize upstream of this).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=-1)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import SyntheticLMData
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.runtime import FaultInjector, Trainer, TrainerConfig
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_host_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    data = SyntheticLMData(
+        vocab=cfg.vocab, batch=args.batch, seq=args.seq, seed=0,
+        input_mode=cfg.input_mode, d_model=cfg.d_model,
+        encoder=cfg.encoder_layers > 0, mrope=cfg.pos == "mrope")
+    injector = FaultInjector(
+        fail_at={args.fail_at: "cli-injected failure"}
+        if args.fail_at >= 0 else {})
+    tr = Trainer(cfg, mesh, data,
+                 TrainerConfig(steps=args.steps,
+                               ckpt_every=args.ckpt_every,
+                               ckpt_dir=args.ckpt, lr=args.lr),
+                 injector=injector)
+    out = tr.run()
+    print(f"[train] arch={args.arch} {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""GQA attention: train/prefill (chunked online-softmax), decode (cached KV).
+
+Covers every attention variant in the zoo: grouped KV (any ratio), sliding
+window (gemma2 local layers), attention-logit softcap (gemma2), QKV bias
+(qwen2), M-RoPE (qwen2-vl), MQA (granite-34b, kv=1), cross-attention
+(whisper decoder), bidirectional encoders.
+
+Masks are built from sequence RANKS (iota), never from per-batch position
+tensors: causality/windowing is a property of sequence order, so the mask is
+a batch-free [1, Sq, Sk] — an early dry-run showed GSPMD replicating a
+[B, Sq, Sk] f32 position-derived mask on every device (~1.2 TB of traffic
+per layer at train_4k), which this layout eliminates.  RoPE still uses the
+real (possibly per-batch, possibly M-RoPE) position tensors.
+
+Long sequences use a lax.scan over KV chunks with online softmax (flash-style
+numerics) so 32k prefill never materializes an S x S score matrix.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _mask_bias(q_rank, k_rank, causal: bool, window: Optional[int],
+               k_valid=None):
+    """[1, Sq, Sk] additive bias in f32 from sequence ranks [1, S]."""
+    d = q_rank[:, :, None] - k_rank[:, None, :]
+    m = jnp.ones(d.shape, dtype=bool)
+    if causal:
+        m = m & (d >= 0)
+    if window is not None:
+        m = m & (d < window)
+    if k_valid is not None:
+        m = m & k_valid[:, None, :]
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def _attend_dense(q, k, v, bias, scale, cap, scores_f32: bool = True):
+    """q: [B,Sq,H,hd]; k/v: [B,Sk,KV,hd]; bias: [1,Sq,Sk].
+
+    scores_f32=False materializes scores/weights in bf16 (max/sum reductions
+    still accumulate in f32 via fused convert-reduce) — halves the dominant
+    HBM term of 4k training; the full fix is a fused flash kernel whose
+    scores never leave VMEM (see EXPERIMENTS §Perf)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, hd)
+    sdt = jnp.float32 if scores_f32 else jnp.bfloat16
+    logits = jnp.einsum("bqkrh,bskh->bkrqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = (softcap(logits, cap) + bias[:, None, None, :, :]).astype(sdt)
+    m = jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True)
+    p = jnp.exp(logits.astype(jnp.float32) - m).astype(sdt)
+    den = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", p, v,
+                     preferred_element_type=jnp.float32)
+    out = out / den.reshape(b, kv, rep, sq, 1).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, q_rank, k_rank, causal, window, scale, cap,
+                    chunk: int = 1024, k_valid=None):
+    """Online-softmax over KV chunks — O(S·chunk) memory for long prefill.
+    q_rank: [1, Sq]; k_rank: [1, Sk]; k_valid: [1, Sk] or None."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    rep = h // kv
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    valid = (k_valid if k_valid is not None
+             else jnp.ones((1, sk), dtype=bool))
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_rank = jnp.pad(k_rank, ((0, 0), (0, pad)), constant_values=-1)
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    kc = k.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_rank.reshape(1, n_chunks, chunk).transpose(1, 0, 2)
+    mc = valid.reshape(1, n_chunks, chunk).transpose(1, 0, 2)
+    qg = q.reshape(b, sq, kv, rep, hd).astype(jnp.float32)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kci, vci, pci, mci = xs
+        bias = _mask_bias(q_rank, pci, causal, window, mci)  # [1,Sq,C]
+        logits = jnp.einsum("bqkrh,bckh->bkrqc", qg,
+                            kci.astype(jnp.float32)) * scale
+        logits = softcap(logits, cap) + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m_prev, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkrqc,bckh->bkrqh", p, vci.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, kv, rep, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, rep, sq), jnp.float32),
+            jnp.zeros((b, kv, rep, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, pc, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention(p: dict, x: jnp.ndarray, cfg, spec, positions,
+              *, causal: bool = True, cache: Optional[dict] = None,
+              cache_index=None, kv_source: Optional[jnp.ndarray] = None,
+              chunked_threshold: Optional[int] = None):
+    """Full attention sublayer (projections + rope + attend + out-proj).
+
+    cache: {"k","v"} [B, S_max, KV, hd] for self-attn prefill/decode, or
+    {"xk","xv"} precomputed encoder KV for cross-attention decode.
+    kv_source: encoder states for cross-attention prefill/train.
+    Returns (out, new_cache).
+    """
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    b, s, _ = x.shape
+    scale = hd ** -0.5
+    if chunked_threshold is None:
+        chunked_threshold = getattr(cfg, "attn_chunk_threshold", 8192)
+
+    q = _split_heads(x @ p["wq"], h, hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, h, hd)
+    cross = kv_source is not None or (cache is not None and "xk" in cache)
+    if cross and cache is not None and "xk" in cache:
+        k, v = cache["xk"], cache["xv"]
+        new_cache = {"xk": k, "xv": v}
+    else:
+        src = kv_source if cross else x
+        k = _split_heads(src @ p["wk"], kvh, hd)
+        v = _split_heads(src @ p["wv"], kvh, hd)
+        if "bk" in p:
+            k = k + p["bk"].reshape(1, 1, kvh, hd)
+            v = v + p["bv"].reshape(1, 1, kvh, hd)
+        if not cross and cfg.pos in ("rope", "mrope"):
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        if cross:
+            new_cache = {"xk": k, "xv": v}
+        elif cache is not None:   # write into the ring buffer
+            idx = cache_index
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+        else:
+            new_cache = None
+
+    # ---- batch-free sequence-rank masks ----
+    sk = k.shape[1]
+    k_rank = jnp.arange(sk, dtype=jnp.int32)[None]
+    if cross:
+        q_rank = jnp.zeros((1, s), jnp.int32)
+        k_valid = None
+        causal_, window_ = False, None
+    elif cache is not None and "k" in new_cache:
+        q_rank = (cache_index + jnp.arange(s, dtype=jnp.int32))[None]
+        k_valid = (k_rank <= cache_index + s - 1)
+        causal_, window_ = causal, spec.window
+    else:
+        q_rank = jnp.arange(s, dtype=jnp.int32)[None]
+        k_valid = None
+        causal_, window_ = causal, spec.window
+
+    if sk > chunked_threshold and s > 1:
+        out = _attend_chunked(q, k, v, q_rank, k_rank, causal_, window_,
+                              scale, cfg.attn_softcap, k_valid=k_valid)
+    else:
+        bias = _mask_bias(q_rank, k_rank, causal_, window_, k_valid)
+        out = _attend_dense(q, k, v, bias, scale, cfg.attn_softcap,
+                            scores_f32=getattr(cfg, "attn_scores_f32", True))
+
+    out = out.reshape(b, s, h * hd) @ p["wo"]
+    return out, new_cache

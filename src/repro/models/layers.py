@@ -1,0 +1,95 @@
+"""Shared model layers: norms, rotary embeddings (incl. M-RoPE), softcaps."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> Tuple:
+    """positions [..., S] -> cos/sin [..., S, dim/2] in f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> jnp.ndarray:
+    """Rotary embedding.  x: [B, S, H, hd]; positions: [B, S] or [3, B, S]
+    (M-RoPE: temporal/height/width position streams — qwen2-vl §3.1, with the
+    modality frontend stubbed the three streams arrive precomputed)."""
+    hd = x.shape[-1]
+    if positions.ndim == 3:  # M-RoPE
+        secs = mrope_sections
+        assert secs is not None and sum(secs) == hd // 2
+        cos_parts, sin_parts = [], []
+        start = 0
+        for si, sec in enumerate(secs):
+            # each head-dim section rotates by its own position stream
+            freqs = 1.0 / (theta ** (
+                (jnp.arange(start, start + sec, dtype=jnp.float32) * 2) / hd))
+            ang = positions[si].astype(jnp.float32)[..., None] * freqs
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+            start += sec
+        cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]
+        sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+    else:
+        cos, sin = _rope_angles(positions, hd, theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu_sq":  # RWKV channel-mix
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def group_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+                  eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head group norm (RWKV output norm). x: [B, S, H, hd]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)

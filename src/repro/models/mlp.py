@@ -1,0 +1,27 @@
+"""Dense MLP variants: SwiGLU / GeGLU / plain (GPT-BigCode) / RWKV channel-mix."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import activation
+
+
+def mlp(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.glu:
+        return (activation(x @ p["wg"], cfg.act) * (x @ p["wu"])) @ p["wd"]
+    return activation(x @ p["wu"], cfg.act) @ p["wd"]
+
+
+def rwkv_channel_mix(p: dict, x: jnp.ndarray, shift_state, cfg):
+    """RWKV channel-mix with token shift.  x: [B,S,d]; shift_state: [B,d]
+    (last token of the previous step for decode).  Returns (out, new_state)."""
+    b, s, d = x.shape
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    xx = prev - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = activation(xk @ p["wu"], "relu_sq")
+    r = jnp.clip(xr @ p["wr"], -60.0, 60.0)
+    out = (k @ p["wd"]) * (1.0 / (1.0 + jnp.exp(-r)))
+    return out, x[:, -1, :]

@@ -1,0 +1,96 @@
+"""Mamba selective SSM block (arXiv:2312.00752) for the Jamba hybrid.
+
+Chunked associative scan: within a chunk the diagonal recurrence
+    s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t
+is evaluated step-serially inside register-resident chunks;
+chunk boundaries carry the state with a cumulative-decay correction.  The
+conv1d frontend is a causal depthwise convolution with a (d_conv-1)-token
+carry for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _causal_conv(x, w, b, carry):
+    """x: [B,S,di]; w: [K,di] depthwise; carry: [B,K-1,di] (previous tokens).
+    Returns (y [B,S,di], new_carry)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_carry = xp[:, -(k - 1):, :] if k > 1 else carry
+    return y + b[None, None, :], new_carry
+
+
+def mamba_mix(p: dict, x: jnp.ndarray, cfg, state: Tuple, chunk: int = 32,
+              scan_impl: str = "unroll"):
+    """x: [B,S,d].  state: (ssm [B,di,ds] f32, conv [B,K-1,di]).
+    Returns (out [B,S,d], new_state)."""
+    m = cfg.mamba
+    b, s, d = x.shape
+    di = m.d_inner(d)
+    ds = m.d_state
+    xz = x @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    s0, conv0 = state
+    xc, conv1 = _causal_conv(xr, p["conv_w"], p["conv_b"], conv0)
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ p["x_dbc"]
+    dt_rank = p["dt_proj"].shape[0]
+    dt_raw, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"]
+                         + p["dt_bias"][None, None, :])     # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [di,ds]
+    dtA = dt.astype(jnp.float32)[..., None] * A[None, None]  # [B,S,di,ds] <=0
+    bx = (dt.astype(jnp.float32) * xc.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, :, None, :]             # [B,S,di,ds]
+
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    c = min(chunk, n_chunks * chunk)
+
+    def per_chunk(carry, xs):
+        s_prev = carry                                      # [B,di,ds]
+        dta_c, bx_c = xs                                    # [B,c,di,ds]
+        if scan_impl == "unroll":
+            # UNROLLED in-chunk recurrence: the chunk fuses into elementwise
+            # kernels with the running state in registers; HBM traffic is
+            # read(dtA,bx) + write(s_all) — the intrinsic minimum.  The
+            # associative_scan variant pays 2·log2(chunk) full-array passes
+            # (kept selectable for the §Perf A/B; see EXPERIMENTS.md).
+            states = []
+            cur = s_prev
+            for i in range(c):
+                cur = jnp.exp(dta_c[:, i]) * cur + bx_c[:, i]
+                states.append(cur)
+            s_c = jnp.stack(states, axis=1)
+            return cur, s_c
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 + a2, jnp.exp(a2) * b1 + b2
+
+        loga, s_local = jax.lax.associative_scan(
+            combine, (dta_c, bx_c), axis=1)
+        s_c = s_local + jnp.exp(loga) * s_prev[:, None]
+        return s_c[:, -1], s_c
+
+    xs = tuple(a.reshape(b, n_chunks, c, di, ds).transpose(1, 0, 2, 3, 4)
+               for a in (dtA, bx))
+    s_fin, s_all = jax.lax.scan(per_chunk, s0.astype(jnp.float32), xs)
+    s_all = s_all.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * c, di, ds)
+    s_all = s_all[:, :s]
+    y = jnp.einsum("bsdn,bsn->bsd", s_all, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, None] * xc.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, (s_fin.astype(s0.dtype), conv1)

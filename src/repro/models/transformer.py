@@ -1,0 +1,552 @@
+"""Model assembly: parameter templates, sharding specs, and the forward pass.
+
+Every architecture in the zoo flows through one code path:
+
+  * ``param_template`` declares each parameter's shape + logical axes; from it
+    derive real inits (smoke tests), ShapeDtypeStructs (dry-run), and
+    PartitionSpecs (FSDP + TP/EP/SP sharding rules with divisibility checks).
+  * layers are grouped by the smallest repeating pattern period and parameters
+    are stacked over groups; the forward pass ``lax.scan``s over groups with
+    ``jax.checkpoint`` (remat) in training — the lowered HLO stays small even
+    for the 398B Jamba config.
+  * caches (attention KV, Mamba ssm+conv, RWKV wkv+shifts) are pytrees stacked
+    the same way and threaded through the scan as xs/ys.
+
+Modes: "train" (full causal, loss-ready hidden states), "prefill" (returns a
+filled cache), "decode" (single token against a cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import attention
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import norm, softcap
+from repro.models.mlp import mlp, rwkv_channel_mix
+from repro.models.moe import moe_ffn
+from repro.models.rwkv import rwkv_time_mix
+from repro.models.ssm import mamba_mix
+
+
+class P(NamedTuple):
+    """Parameter leaf spec: shape, logical axes (one per dim), init kind."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"
+
+
+# logical axis -> mesh axis (None = replicate).  "embed" rows are the FSDP
+# dimension; "model-ish" axes are tensor/expert parallel.
+SHARDING_RULES: Dict[str, Optional[str]] = {
+    "embed": "data",
+    "vocab": "model",
+    "qdim": "model",
+    # KV projections stay replicated across TP: GQA ratios (kv=1..8) rarely
+    # divide the model axis, and sharding flattened kv*head_dim would split
+    # head_dim itself.  They are tiny and still FSDP-sharded on "embed".
+    "kvdim": None,
+    "heads": "model",
+    "ff": "model",
+    "eff": None,
+    "experts": "model",
+    "mamba": "model",
+    "mamba2x": "model",
+    "seq": None,
+    "batch": "data",
+    "cache_seq": "model",
+    None: None,
+}
+
+
+# --------------------------------------------------------------------- specs
+def _norm_t(cfg, name="scale") -> Dict[str, P]:
+    t = {"scale": P((cfg.d_model,), (None,), "zeros")}
+    if cfg.norm == "layernorm":
+        t["scale"] = P((cfg.d_model,), (None,), "ones")
+        t["bias"] = P((cfg.d_model,), (None,), "zeros")
+    return t
+
+
+def _attn_t(cfg, cross=False) -> Dict[str, P]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    t = {
+        "wq": P((d, h * hd), ("embed", "qdim")),
+        "wk": P((d, kv * hd), ("embed", "kvdim")),
+        "wv": P((d, kv * hd), ("embed", "kvdim")),
+        "wo": P((h * hd, d), ("qdim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        t["bq"] = P((h * hd,), ("qdim",), "zeros")
+        t["bk"] = P((kv * hd,), ("kvdim",), "zeros")
+        t["bv"] = P((kv * hd,), ("kvdim",), "zeros")
+    return t
+
+
+def _mlp_t(cfg) -> Dict[str, P]:
+    d, f = cfg.d_model, cfg.d_ff
+    t = {"wu": P((d, f), ("embed", "ff")),
+         "wd": P((f, d), ("ff", "embed"))}
+    if cfg.glu:
+        t["wg"] = P((d, f), ("embed", "ff"))
+    return t
+
+
+def _moe_t(cfg) -> Dict[str, P]:
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_expert
+    e = m.num_experts
+    experts = {"wu": P((e, d, fe), ("experts", "embed", "eff")),
+               "wd": P((e, fe, d), ("experts", "eff", "embed"))}
+    if cfg.glu:
+        experts["wg"] = P((e, d, fe), ("experts", "embed", "eff"))
+    t: Dict[str, Any] = {"router": P((d, e), (None, None)),
+                         "experts": experts}
+    if m.shared_expert:
+        t["shared"] = _mlp_t(cfg)
+    return t
+
+
+def _mamba_t(cfg) -> Dict[str, P]:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.d_inner(d)
+    ds = m.d_state
+    dtr = max(1, di // 16)
+    return {
+        "in_proj": P((d, 2 * di), ("embed", "mamba2x")),
+        "conv_w": P((m.d_conv, di), (None, "mamba")),
+        "conv_b": P((di,), ("mamba",), "zeros"),
+        "x_dbc": P((di, dtr + 2 * ds), ("mamba", None)),
+        "dt_proj": P((dtr, di), (None, "mamba")),
+        "dt_bias": P((di,), ("mamba",), "dtbias"),
+        "A_log": P((di, ds), ("mamba", None), "alog"),
+        "D": P((di,), ("mamba",), "ones"),
+        "out_proj": P((di, d), ("mamba", "embed")),
+    }
+
+
+def _rwkv_t(cfg) -> Dict[str, P]:
+    r = cfg.rwkv
+    d = cfg.d_model
+    h = d // r.head_dim
+    return {
+        "mu_x": P((d,), (None,), "zeros"),
+        "mu": P((5, d), (None, None), "zeros"),
+        "mix_a": P((d, 5 * r.mix_lora), ("embed", None), "small"),
+        "mix_b": P((5, r.mix_lora, d), (None, None, "qdim"), "small"),
+        "wr": P((d, d), ("embed", "qdim")),
+        "wk": P((d, d), ("embed", "qdim")),
+        "wv": P((d, d), ("embed", "qdim")),
+        "wg": P((d, d), ("embed", "qdim")),
+        "wo": P((d, d), ("qdim", "embed")),
+        "w0": P((d,), ("qdim",), "zeros"),
+        "dec_a": P((d, r.decay_lora), ("embed", None), "small"),
+        "dec_b": P((r.decay_lora, d), (None, "qdim"), "small"),
+        "u": P((h, r.head_dim), ("heads", None), "small"),
+        "ln_x": P((d,), ("qdim",), "ones"),
+    }
+
+
+def _sublayer_t(cfg, spec: LayerSpec, cross: bool) -> Dict[str, Any]:
+    t: Dict[str, Any] = {"ln1": _norm_t(cfg)}
+    if spec.mixer == "attn":
+        t["mixer"] = _attn_t(cfg)
+    elif spec.mixer == "mamba":
+        t["mixer"] = _mamba_t(cfg)
+    elif spec.mixer == "rwkv":
+        t["mixer"] = _rwkv_t(cfg)
+    if cross:
+        t["xln"] = _norm_t(cfg)
+        t["xattn"] = _attn_t(cfg, cross=True)
+    t["ln2"] = _norm_t(cfg)
+    if spec.mixer == "rwkv":
+        d, f = cfg.d_model, cfg.d_ff
+        t["mlp"] = {"mu_k": P((d,), (None,), "zeros"),
+                    "mu_r": P((d,), (None,), "zeros"),
+                    "wu": P((d, f), ("embed", "ff")),
+                    "wr": P((d, d), ("embed", "qdim")),
+                    "wd": P((f, d), ("ff", "embed"))}
+    elif spec.mlp == "moe":
+        t["mlp"] = _moe_t(cfg)
+    else:
+        t["mlp"] = _mlp_t(cfg)
+    if cfg.post_norms:
+        t["pn1"] = _norm_t(cfg)
+        t["pn2"] = _norm_t(cfg)
+    return t
+
+
+def param_template(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    t: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens" or cfg.encoder_layers:
+        t["embed"] = {"tok": P((cfg.padded_vocab, d), ("vocab", "embed"),
+                               "embed")}
+    if cfg.pos == "learned":
+        t.setdefault("embed", {})["pos"] = P((cfg.max_seq, d),
+                                             ("seq", "qdim"), "embed")
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    specs = cfg.layer_specs()[:period]
+    dec = {}
+    for i, spec in enumerate(specs):
+        sub = _sublayer_t(cfg, spec, cross=cfg.encoder_layers > 0)
+        dec[f"sub{i}"] = jax.tree.map(
+            lambda p: P((groups,) + p.shape, (None,) + p.axes, p.init),
+            sub, is_leaf=lambda x: isinstance(x, P))
+    t["dec"] = dec
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec(mixer="attn", mlp="dense")
+        sub = _sublayer_t(cfg, enc_spec, cross=False)
+        t["enc"] = {"sub0": jax.tree.map(
+            lambda p: P((cfg.encoder_layers,) + p.shape, (None,) + p.axes,
+                        p.init),
+            sub, is_leaf=lambda x: isinstance(x, P))}
+        t["enc_norm"] = _norm_t(cfg)
+    t["final_norm"] = _norm_t(cfg)
+    if not cfg.tie_embeddings:
+        t["lm_head"] = P((d, cfg.padded_vocab), ("embed", "vocab"))
+    return t
+
+
+# ----------------------------------------------------------------- realize
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    tmpl = param_template(cfg)
+    leaves, treedef = jax.tree.flatten(
+        tmpl, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+
+    def make(p: P, key):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, _dtype(cfg))
+        if p.init == "ones":
+            return jnp.ones(p.shape, _dtype(cfg))
+        if p.init == "alog":
+            ds = p.shape[-1]
+            a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                         p.shape[:-1] + (1,)).reshape(p.shape)
+            return jnp.log(a).astype(_dtype(cfg))
+        if p.init == "dtbias":
+            return jnp.full(p.shape, math.log(math.e - 1), _dtype(cfg))
+        scale = 0.006 if p.init == "small" else 0.02
+        if p.init == "embed":
+            scale = 1.0 / math.sqrt(cfg.d_model)
+        return (jax.random.normal(key, p.shape, jnp.float32)
+                * scale).astype(_dtype(cfg))
+
+    return jax.tree.unflatten(treedef, [make(p, k)
+                                        for p, k in zip(leaves, keys)])
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, _dtype(cfg)),
+        param_template(cfg), is_leaf=lambda x: isinstance(x, P))
+
+
+def param_pspecs(cfg: ModelConfig, mesh):
+    from jax.sharding import PartitionSpec
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(p: P):
+        parts = []
+        for dim, ax in zip(p.shape, p.axes):
+            mesh_ax = SHARDING_RULES.get(ax)
+            if mesh_ax is not None and dim % sizes[mesh_ax] == 0 and dim > 1:
+                parts.append(mesh_ax)
+            else:
+                parts.append(None)
+        # never map one mesh axis to two tensor dims
+        seen = set()
+        clean = []
+        for a in parts:
+            if a is not None and a in seen:
+                clean.append(None)
+            else:
+                clean.append(a)
+                seen.add(a)
+        return PartitionSpec(*clean)
+
+    return jax.tree.map(spec, param_template(cfg),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# -------------------------------------------------------------------- cache
+def cache_template(cfg: ModelConfig, batch: int, s_max: int,
+                   s_enc: Optional[int] = None) -> Dict[str, Any]:
+    """Shape/axes template for decode caches (same P-leaf formalism)."""
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    specs = cfg.layer_specs()[:period]
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    d = cfg.d_model
+    t: Dict[str, Any] = {}
+    for i, spec in enumerate(specs):
+        sub: Dict[str, P] = {}
+        if spec.mixer == "attn":
+            sub["k"] = P((groups, batch, s_max, kv, hd),
+                         (None, "batch", "cache_seq", "kvheads", None))
+            sub["v"] = P((groups, batch, s_max, kv, hd),
+                         (None, "batch", "cache_seq", "kvheads", None))
+        elif spec.mixer == "mamba":
+            m = cfg.mamba
+            di = m.d_inner(d)
+            sub["ssm"] = P((groups, batch, di, m.d_state),
+                           (None, "batch", "mamba", None))
+            sub["conv"] = P((groups, batch, m.d_conv - 1, di),
+                            (None, "batch", None, "mamba"))
+        elif spec.mixer == "rwkv":
+            r = cfg.rwkv
+            h = d // r.head_dim
+            sub["wkv"] = P((groups, batch, h, r.head_dim, r.head_dim),
+                           (None, "batch", "heads", None, None))
+            sub["shift_att"] = P((groups, batch, d), (None, "batch", None))
+            sub["shift_ffn"] = P((groups, batch, d), (None, "batch", None))
+        if cfg.encoder_layers and s_enc:
+            sub["xk"] = P((groups, batch, s_enc, kv, hd),
+                          (None, "batch", None, "kvheads", None))
+            sub["xv"] = P((groups, batch, s_enc, kv, hd),
+                          (None, "batch", None, "kvheads", None))
+        t[f"sub{i}"] = sub
+    return t
+
+
+def init_cache(cfg, batch, s_max, s_enc=None, abstract=False):
+    tmpl = cache_template(cfg, batch, s_max, s_enc)
+
+    def make(p: P):
+        if abstract:
+            return jax.ShapeDtypeStruct(p.shape, _dtype(cfg))
+        return jnp.zeros(p.shape, _dtype(cfg))
+
+    return jax.tree.map(make, tmpl, is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cfg, mesh, batch, s_max, s_enc=None):
+    from jax.sharding import PartitionSpec
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = dict(SHARDING_RULES)
+    rules["kvheads"] = "model"
+
+    def spec(p: P):
+        parts = []
+        seen = set()
+        for dim, ax in zip(p.shape, p.axes):
+            mesh_ax = rules.get(ax)
+            if (mesh_ax is not None and mesh_ax not in seen
+                    and dim % sizes[mesh_ax] == 0 and dim > 1):
+                parts.append(mesh_ax)
+                seen.add(mesh_ax)
+            else:
+                parts.append(None)
+        return PartitionSpec(*parts)
+
+    return jax.tree.map(spec, cache_template(cfg, batch, s_max, s_enc),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------ forward
+def _run_sublayer(cfg, spec: LayerSpec, p, x, positions, *, causal, cache,
+                  cache_index, enc_out, aux, decode=False):
+    new_cache = {}
+    h = norm(x, p["ln1"], cfg.norm)
+    if spec.mixer == "attn":
+        attn_cache = ({"k": cache["k"], "v": cache["v"]}
+                      if cache and "k" in cache else None)
+        out, nc = attention(p["mixer"], h, cfg, spec, positions,
+                            causal=causal, cache=attn_cache,
+                            cache_index=cache_index)
+        if nc:
+            new_cache.update(nc)
+    elif spec.mixer == "mamba":
+        state = (cache["ssm"], cache["conv"]) if cache else None
+        if state is None:
+            m = cfg.mamba
+            b = x.shape[0]
+            state = (jnp.zeros((b, m.d_inner(cfg.d_model), m.d_state),
+                               jnp.float32),
+                     jnp.zeros((b, m.d_conv - 1, m.d_inner(cfg.d_model)),
+                               x.dtype))
+        out, (s1, c1) = mamba_mix(p["mixer"], h, cfg, state,
+                                  chunk=cfg.mamba_chunk,
+                                  scan_impl=cfg.mamba_scan)
+        new_cache.update({"ssm": s1.astype(x.dtype), "conv": c1})
+    elif spec.mixer == "rwkv":
+        r = cfg.rwkv
+        b = x.shape[0]
+        hds = cfg.d_model // r.head_dim
+        state = ((cache["wkv"], cache["shift_att"]) if cache else
+                 (jnp.zeros((b, hds, r.head_dim, r.head_dim), jnp.float32),
+                  jnp.zeros((b, cfg.d_model), x.dtype)))
+        out, (wkv1, sh1) = rwkv_time_mix(p["mixer"], h, cfg, state)
+        new_cache.update({"wkv": wkv1.astype(x.dtype), "shift_att": sh1})
+    else:
+        out = jnp.zeros_like(x)
+    if cfg.post_norms:
+        out = norm(out, p["pn1"], cfg.norm)
+    x = x + out
+
+    if "xattn" in p and (enc_out is not None or decode):
+        hx = norm(x, p["xln"], cfg.norm)
+        # decode reads the cross KV cached at prefill; prefill computes it
+        xc = ({"xk": cache["xk"], "xv": cache["xv"]}
+              if decode and cache and "xk" in cache else None)
+        out, xnc = attention(p["xattn"], hx, cfg, spec, positions,
+                             causal=False, cache=xc,
+                             kv_source=None if xc else enc_out)
+        if xnc:
+            new_cache.update(xnc)
+        x = x + out
+
+    h2 = norm(x, p["ln2"], cfg.norm)
+    if spec.mixer == "rwkv":
+        shift = cache["shift_ffn"] if cache else jnp.zeros(
+            (x.shape[0], cfg.d_model), x.dtype)
+        out, sh2 = rwkv_channel_mix(p["mlp"], h2, shift, cfg)
+        new_cache["shift_ffn"] = sh2
+    elif spec.mlp == "moe":
+        out, a = moe_ffn(p["mlp"], h2, cfg)
+        aux = aux + a
+    else:
+        out = mlp(p["mlp"], h2, cfg)
+    if cfg.post_norms:
+        out = norm(out, p["pn2"], cfg.norm)
+    return x + out, new_cache, aux
+
+
+def _ac(x, sharding):
+    """Activation sharding constraint (no-op when sharding is None).
+    Without this, GSPMD inherits the FSDP `d`-over-data layout from the
+    embedding table and replicates the batch through attention."""
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def _stack_forward(cfg, stack_params, x, positions, *, specs, causal,
+                   cache=None, cache_index=None, enc_out=None, remat=True,
+                   decode=False, act_sharding=None):
+    """Scan over layer groups.  cache (optional) is threaded as xs/ys."""
+    period = len(specs)
+
+    def body(carry, xs):
+        xh, aux = carry
+        gp, gc = xs
+        new_gc = {}
+        for i, spec in enumerate(specs):
+            sub_c = gc.get(f"sub{i}") if gc is not None else None
+            xh, nc, aux = _run_sublayer(
+                cfg, spec, gp[f"sub{i}"], xh, positions, causal=causal,
+                cache=sub_c, cache_index=cache_index, enc_out=enc_out,
+                aux=aux, decode=decode)
+            xh = _ac(xh, act_sharding)
+            if nc:
+                new_gc[f"sub{i}"] = nc
+        return (xh, aux), new_gc
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), new_cache = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)), (stack_params, cache))
+    return x, aux, new_cache
+
+
+def _embed_in(cfg, params, batch, positions):
+    if cfg.input_mode == "embeds" and "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos == "learned":
+        pos = positions if positions.ndim == 2 else positions[0]
+        x = x + jnp.take(params["embed"]["pos"], pos, axis=0)
+    return x
+
+
+def _positions(batch, s, b):
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def run_encoder(cfg, params, enc_embeds, act_sharding=None):
+    b, s, _ = enc_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _ac(enc_embeds.astype(_dtype(cfg)), act_sharding)
+    enc_spec = LayerSpec(mixer="attn", mlp="dense")
+    x, _, _ = _stack_forward(cfg, params["enc"], x, pos,
+                             specs=[enc_spec], causal=False,
+                             act_sharding=act_sharding)
+    return norm(x, params["enc_norm"], cfg.norm)
+
+
+def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
+            cache=None, act_sharding=None):
+    """Returns (hidden [B,S,d], aux_loss, new_cache)."""
+    specs = cfg.layer_specs()[:cfg.scan_period()]
+    enc_out = None
+    if cfg.encoder_layers and "enc_embeds" in batch:
+        enc_out = run_encoder(cfg, params, batch["enc_embeds"],
+                              act_sharding)
+    if cfg.input_mode == "embeds" and "embeds" in batch:
+        b, s = batch["embeds"].shape[:2]
+    else:
+        b, s = batch["tokens"].shape
+    positions = _positions(batch, s, b)
+    x = _ac(_embed_in(cfg, params, batch, positions), act_sharding)
+    cache_index = batch.get("cache_index") if cache is not None else None
+    if cache is not None and cache_index is None:
+        cache_index = jnp.zeros((), jnp.int32)
+    x, aux, new_cache = _stack_forward(
+        cfg, params["dec"], x, positions, specs=specs,
+        causal=True, cache=cache, cache_index=cache_index,
+        enc_out=enc_out, remat=(mode == "train"), decode=(mode == "decode"),
+        act_sharding=act_sharding)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return x, aux, new_cache
+
+
+def logits_from_hidden(cfg, params, hidden):
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T
+    else:
+        w = params["lm_head"]
+    logits = hidden @ w.astype(hidden.dtype)
+    logits = softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:  # mask the TP-padding token columns
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch, act_sharding=None):
+    """Causal LM loss (f32 logsumexp), labels < 0 are masked."""
+    hidden, aux, _ = forward(cfg, params, batch, mode="train",
+                             act_sharding=act_sharding)
+    logits = logits_from_hidden(cfg, params, hidden).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom + 0.01 * aux
+    return loss, {"nll": nll.sum() / denom, "aux": aux,
+                  "tokens": mask.sum()}

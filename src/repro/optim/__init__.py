@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (  # noqa: F401
+    AdamW,
+    Adafactor,
+    make_optimizer,
+    opt_state_pspecs,
+)
+from repro.optim.compression import (  # noqa: F401
+    compressed_psum,
+    compressed_psum_exact,
+    dequantize_int8,
+    quantize_int8,
+)

@@ -1,0 +1,6 @@
+from repro.runtime.trainer import (  # noqa: F401
+    FaultInjector,
+    InjectedFault,
+    Trainer,
+    TrainerConfig,
+)

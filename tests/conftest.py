@@ -1,0 +1,8 @@
+import os
+
+# Tests run against the single real CPU device (no fake-device override here:
+# the 512-device mesh belongs exclusively to launch/dryrun.py, which sets
+# XLA_FLAGS before jax initializes).  Distributed semantics are unit-tested on
+# 1-device meshes; multi-device behaviour is exercised via subprocess tests
+# that launch dryrun.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

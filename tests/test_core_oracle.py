@@ -1,0 +1,101 @@
+"""OTCD / TCD / wave engines against the brute-force oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import TCQEngine, TemporalGraph, brute_force_query
+from repro.graphs import (erdos_temporal, paper_style_example, planted_cores,
+                          powerlaw_temporal)
+
+CASES = [
+    ("paper", paper_style_example(), 2, 1, 8, 1),
+    ("planted", planted_cores(seed=3), 3, 1, 40, 1),
+    ("powerlaw", powerlaw_temporal(80, 500, 60, seed=1), 2, 1, 60, 1),
+    ("erdos", erdos_temporal(40, 300, 25, seed=5), 3, 1, 25, 1),
+    ("subwindow", planted_cores(seed=9), 3, 10, 30, 1),
+    ("strength", erdos_temporal(20, 400, 12, seed=2), 2, 1, 12, 2),
+    ("k1", paper_style_example(), 1, 1, 8, 1),
+]
+
+
+def _check(result, oracle):
+    assert set(c.tti for c in result.cores) == set(oracle.keys())
+    for c in result.cores:
+        assert set(c.vertices.tolist()) == set(oracle[c.tti]["vertices"])
+        assert c.n_edges == oracle[c.tti]["n_edges"]
+
+
+@pytest.mark.parametrize("name,g,k,Ts,Te,h", CASES, ids=[c[0] for c in CASES])
+@pytest.mark.parametrize("kw", [
+    {},                                  # serial OTCD (paper §4)
+    {"algorithm": "tcd"},                # unpruned TCD (paper §3)
+    {"mode": "wave", "wave": 4},         # batched engine (beyond paper)
+], ids=["otcd", "tcd", "wave"])
+def test_engine_matches_oracle(name, g, k, Ts, Te, h, kw):
+    oracle = brute_force_query(g, k, Ts, Te, h)
+    res = TCQEngine(g).query(k, Ts, Te, h=h, **kw)
+    _check(res, oracle)
+
+
+def test_otcd_evaluates_fewer_cells_than_tcd():
+    g = planted_cores(seed=3)
+    eng = TCQEngine(g)
+    a = eng.query(3, 1, 40)
+    b = eng.query(3, 1, 40, algorithm="tcd")
+    assert a.stats.cells_evaluated < b.stats.cells_evaluated
+    assert a.stats.pruned_total > 0
+
+
+def test_wave_uses_fewer_device_steps():
+    g = planted_cores(seed=3)
+    eng = TCQEngine(g)
+    serial = eng.query(3, 1, 40)
+    wave = eng.query(3, 1, 40, mode="wave", wave=16)
+    assert wave.stats.device_steps < serial.stats.device_steps
+
+
+def test_integer_boundaries_add_no_new_cores():
+    """Unique-timestamp compaction is exact: enumerating every integer
+    (ts, te) boundary pair yields the same distinct-core set."""
+    from repro.core.oracle import peel_window
+
+    g = paper_style_example()
+    k = 2
+    full = {}
+    for ts in range(1, 9):
+        for te in range(ts, 9):
+            em = peel_window(g, ts, te, k)
+            if em.any():
+                tti = (int(g.t[em].min()), int(g.t[em].max()))
+                full.setdefault(tti, int(em.sum()))
+    compact = brute_force_query(g, k, 1, 8)
+    assert set(full.keys()) == set(compact.keys())
+
+
+def test_historical_kcore_special_case():
+    """HCQ (paper Def. 1) == the TCQ result whose TTI is maximal: querying
+    the fixed window returns the same top core as peeling it directly."""
+    from repro.core.oracle import peel_window
+
+    g = planted_cores(seed=4)
+    em = peel_window(g, 5, 30, 3)
+    res = TCQEngine(g).query(3, 5, 30)
+    if not em.any():
+        assert len(res) == 0
+    else:
+        verts = set(np.unique(np.concatenate(
+            [g.src[em], g.dst[em]])).tolist())
+        top = max(res.cores, key=lambda c: c.n_edges)
+        assert set(top.vertices.tolist()) == verts
+
+
+def test_empty_window():
+    g = paper_style_example()
+    res = TCQEngine(g).query(2, 100, 200)
+    assert len(res) == 0
+
+
+def test_k_too_large():
+    g = paper_style_example()
+    res = TCQEngine(g).query(50, 1, 8)
+    assert len(res) == 0

@@ -1,0 +1,100 @@
+"""Distributed TCQ engine: shard_map semantics on degenerate + subprocess
+multi-device meshes, plan invariants, and both degree-combine variants."""
+
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.distributed import DistributedTCQ, shard_graph
+from repro.core.oracle import peel_window
+from repro.graphs import planted_cores, powerlaw_temporal
+
+
+def _check_engine(g, mesh, combine, k, cells):
+    eng = DistributedTCQ(g, mesh, combine=combine)
+    ts = [c[0] for c in cells]
+    te = [c[1] for c in cells]
+    alive, lo, hi, ne, iters = eng.query_wave(ts, te, k)
+    for i, (a, b) in enumerate(cells):
+        em = peel_window(g, a, b, k)
+        verts = (set(np.unique(np.concatenate(
+            [g.src[em], g.dst[em]])).tolist()) if em.any() else set())
+        got = set(np.flatnonzero(
+            np.asarray(alive[i])[:g.num_vertices]).tolist())
+        assert got == verts, (combine, i)
+        if em.any():
+            assert (int(lo[i]), int(hi[i])) == (int(g.t[em].min()),
+                                                int(g.t[em].max()))
+            assert int(ne[i]) == int(em.sum())
+
+
+@pytest.mark.parametrize("combine", ["psum", "rs_ag"])
+def test_wave_on_unit_mesh(combine):
+    g = planted_cores(seed=3)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    _check_engine(g, mesh, combine, 3, [(1, 40), (5, 30), (10, 20), (1, 15)])
+
+
+def test_pair_aligned_sharding_invariants():
+    g = powerlaw_temporal(80, 600, 50, seed=1)
+    for m in (2, 4, 8):
+        plan = shard_graph(g, m)
+        assert plan.src.shape[0] == m
+        # every real edge appears exactly once; sentinels are inert
+        real = plan.t >= 0
+        assert int(real.sum()) == g.num_edges
+        # pair-locality: local pair ids within [0, P_s)
+        assert int(plan.pair_local[real].max()) < plan.num_pairs_shard
+        # padded vertex space divisible by m
+        assert plan.num_vertices % m == 0
+
+
+_SUBPROCESS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.core.distributed import DistributedTCQ
+from repro.core.oracle import peel_window
+from repro.graphs import planted_cores
+g = planted_cores(seed=3)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for combine in ("psum", "rs_ag"):
+    eng = DistributedTCQ(g, mesh, combine=combine)
+    ts, te, k = [1, 5, 10, 1], [40, 30, 20, 15], 3
+    alive, lo, hi, ne, it = eng.query_wave(ts, te, k)
+    for i in range(4):
+        em = peel_window(g, ts[i], te[i], k)
+        verts = set(np.unique(np.concatenate([g.src[em], g.dst[em]])).tolist()) if em.any() else set()
+        got = set(np.flatnonzero(np.asarray(alive[i])[:g.num_vertices]).tolist())
+        assert got == verts, (combine, i)
+print("OK")
+"""
+
+
+def test_wave_on_2x4_mesh_subprocess():
+    """Real multi-device shard_map semantics (8 fake CPU devices require a
+    fresh process: jax locks the device count at first init)."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS],
+                         capture_output=True, text=True, cwd="/root/repo",
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_dryrun_smoke_subprocess():
+    """The dry-run entrypoint itself (reduced configs, real 512-device mesh
+    construction) — proves the mesh + lowering pipeline end to end."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", "gemma2-2b", "--shape", "train_4k,decode_32k",
+         "--mesh", "both"],
+        capture_output=True, text=True, cwd="/root/repo", timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+    assert "0 failed" in out.stdout

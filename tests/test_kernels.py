@@ -1,0 +1,159 @@
+"""Pallas banded-segsum kernel vs the pure-jnp oracle: shape/dtype sweeps.
+
+The kernel runs in interpret mode on CPU (the TPU is the target; interpret
+executes the same kernel body).  Sweeps cover ragged sizes, empty segments,
+hub segments (band wider than one tile), padding tails, and dtypes.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.segdeg.kernel import banded_segsum_pallas, required_k_max
+from repro.kernels.segdeg.ops import make_banded_segsum
+from repro.kernels.segdeg.ref import banded_segsum_ref
+
+
+def _run(vals, segs, s):
+    k_max = required_k_max(segs, s)
+    out = banded_segsum_pallas(jnp.asarray(vals), jnp.asarray(segs),
+                               num_segments=s, k_max=k_max, interpret=True)
+    ref = banded_segsum_ref(jnp.asarray(vals.astype(np.float32)),
+                            jnp.asarray(segs), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,s,q", [
+    (1, 1, 1),            # degenerate
+    (100, 7, 3),          # tiny ragged
+    (1000, 300, 17),      # ragged everything
+    (512, 128, 128),      # exactly tile-aligned
+    (513, 129, 129),      # one past tile boundaries
+    (4096, 1024, 64),     # multi-tile
+    (2048, 4, 8),         # few fat segments (wide band)
+])
+def test_shapes_vs_ref(n, s, q):
+    rng = np.random.default_rng(n + s + q)
+    segs = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    vals = rng.normal(0, 1, (n, q)).astype(np.float32)
+    _run(vals, segs, s)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, np.int32])
+def test_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    n, s, q = 700, 150, 9
+    segs = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    if dtype == np.int32:
+        vals = rng.integers(0, 3, (n, q)).astype(dtype)
+    else:
+        vals = rng.normal(0, 1, (n, q)).astype(dtype)
+    _run(vals.astype(np.float32), segs, s)
+
+
+def test_empty_segments_and_gaps():
+    segs = np.array([0, 0, 5, 5, 5, 299], dtype=np.int32)
+    vals = np.ones((6, 4), dtype=np.float32)
+    _run(vals, segs, 300)
+
+
+def test_hub_segment_band_wider_than_tile():
+    """One segment owns most rows => its output tile spans many input
+    tiles (the k_max dimension does real work)."""
+    n, s, q = 3000, 50, 5
+    segs = np.concatenate([np.zeros(2500, np.int32),
+                           np.sort(np.random.default_rng(0).integers(
+                               1, s, 500)).astype(np.int32)])
+    segs = np.sort(segs)
+    vals = np.random.default_rng(1).normal(0, 1, (n, q)).astype(np.float32)
+    assert required_k_max(segs, s) > 1
+    _run(vals, segs, s)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 90), st.integers(1, 12),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_random(n, s, q, seed):
+    rng = np.random.default_rng(seed)
+    segs = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    vals = rng.normal(0, 1, (n, q)).astype(np.float32)
+    _run(vals, segs, s)
+
+
+def test_dispatcher_falls_back_on_wide_band():
+    segs = np.zeros(100_000, dtype=np.int32)  # one massive hub
+    fn = make_banded_segsum(segs, 4, k_cap=4)
+    vals = np.ones((100_000, 2), dtype=np.float32)
+    out = fn(jnp.asarray(vals), jnp.asarray(segs))
+    assert float(out[0, 0]) == 100_000.0
+
+
+def test_wave_engine_with_kernel_matches_xla():
+    """tcd_wave with the Pallas degree path == the XLA segment_sum path."""
+    import jax
+
+    from repro.core.wave import make_segsum_fns, tcd_wave
+    from repro.graphs import planted_cores
+
+    g = planted_cores(seed=5)
+    tel = g.device_tel()
+    ts = jnp.asarray([1, 5, 10], jnp.int32)
+    te = jnp.asarray([40, 30, 25], jnp.int32)
+    alive0 = jnp.ones((3, g.num_vertices), dtype=bool)
+    outs = []
+    for use_kernel in (False, True):
+        sp, sv = make_segsum_fns(g, use_kernel=use_kernel)
+        res = tcd_wave(tel, alive0, ts, te, 3, 1,
+                       num_vertices=g.num_vertices, seg_pair=sp, seg_vert=sv)
+        outs.append(res)
+    np.testing.assert_array_equal(np.asarray(outs[0].alive),
+                                  np.asarray(outs[1].alive))
+    np.testing.assert_array_equal(np.asarray(outs[0].tti_lo),
+                                  np.asarray(outs[1].tti_lo))
+    np.testing.assert_array_equal(np.asarray(outs[0].n_edges),
+                                  np.asarray(outs[1].n_edges))
+
+
+def test_wave_engine_matches_oracle():
+    from repro.core.oracle import peel_window
+    from repro.core.wave import make_segsum_fns, tcd_wave
+    from repro.graphs import powerlaw_temporal
+
+    g = powerlaw_temporal(50, 300, 40, seed=4)
+    tel = g.device_tel()
+    sp, sv = make_segsum_fns(g, use_kernel=True)
+    ts = [1, 3, 8]
+    te = [40, 20, 30]
+    res = tcd_wave(tel, jnp.ones((3, g.num_vertices), bool),
+                   jnp.asarray(ts, jnp.int32), jnp.asarray(te, jnp.int32),
+                   2, 1, num_vertices=g.num_vertices,
+                   seg_pair=sp, seg_vert=sv)
+    for i in range(3):
+        em = peel_window(g, ts[i], te[i], 2)
+        verts = (set(np.unique(np.concatenate(
+            [g.src[em], g.dst[em]])).tolist()) if em.any() else set())
+        got = set(np.flatnonzero(np.asarray(res.alive[i])).tolist())
+        assert got == verts
+
+
+# ---------------------------------------------------------------- ssm scan
+def test_ssm_scan_kernel_matches_ref():
+    """Pallas diagonal-SSM scan (VMEM-resident state) vs the lax.scan
+    oracle — the register-residency fix identified in EXPERIMENTS §Perf B."""
+    from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+    rng = np.random.default_rng(7)
+    for b, s, f, sc, ft in [(1, 5, 3, 4, 128), (2, 300, 700, 64, 256),
+                            (3, 128, 512, 128, 512)]:
+        la = jnp.asarray(-np.abs(rng.normal(0.3, 0.5, (b, s, f))),
+                         jnp.float32)
+        bx = jnp.asarray(rng.normal(0, 1, (b, s, f)), jnp.float32)
+        s0 = jnp.asarray(rng.normal(0, 1, (b, f)), jnp.float32)
+        out = ssm_scan_pallas(la, bx, s0, s_chunk=sc, f_tile=ft,
+                              interpret=True)
+        ref = ssm_scan_ref(la, bx, s0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
