@@ -1,0 +1,71 @@
+"""Stepwise (seed) vs device-resident pipelined wave engine.
+
+Measures the tentpole claims head to head on the same engine, same
+schedule, same wave width:
+
+  * wall time — the pipelined engine overlaps host pruning bookkeeping
+    with device compute and never re-stacks lane buffers;
+  * host sync counts — one blocking device_get per step vs 3 + one per
+    discovered core;
+  * device->host bytes per step — packed uint32 bitmasks (O(W*V/32)
+    words) vs per-core [V] bool masks (O(W*V) bytes worst case).
+
+The reference workload is a fixed window of the CPU-scaled collegemsg
+analogue (deterministic — no query search loop), chosen to be
+dispatch/transfer-bound like the paper's result-proportional regime.
+Emits rows for benchmarks/results/bench_pipeline.json; run.py folds the
+same rows into the repo-root BENCH_wave.json trajectory file.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import GRAPH_K, emit, engine, graph, timeit
+
+SPAN_UTS = 120      # unique timestamps in the reference window
+START_UTS = 100     # fixed window start (index into unique_ts)
+
+
+def reference_window(name: str):
+    uts = graph(name).unique_ts
+    i0 = min(START_UTS, max(0, uts.size - SPAN_UTS - 1))
+    return int(uts[i0]), int(uts[min(i0 + SPAN_UTS, uts.size - 1)])
+
+
+def run(name: str = "collegemsg", wave: int = 8, repeat: int = 3):
+    eng = engine(name)
+    k = GRAPH_K[name]
+    ts, te = reference_window(name)
+    rows = []
+    by_mode = {}
+    for mode in ("wave_stepwise", "wave"):
+        fn = lambda: eng.query(k, ts, te, mode=mode, wave=wave)  # noqa: E731
+        res = fn()                       # warm the compile caches
+        t = timeit(fn, repeat=repeat)
+        s = res.stats
+        row = {
+            "bench": "pipeline", "graph": name, "mode": mode, "wave": wave,
+            "ts": ts, "te": te, "k": k, "t_s": t, "n_cores": len(res),
+            "device_steps": s.device_steps, "cells": s.cells_evaluated,
+            "duplicates": s.duplicates, "host_syncs": s.host_syncs,
+            "bytes_synced": s.bytes_synced,
+            "syncs_per_step": s.host_syncs / max(1, s.device_steps),
+            "bytes_per_step": s.bytes_synced / max(1, s.device_steps),
+            "lane_refills": s.lane_refills, "peel_iters": s.peel_iters,
+        }
+        rows.append(row)
+        by_mode[mode] = row
+    sw, pl = by_mode["wave_stepwise"], by_mode["wave"]
+    rows.append({
+        "bench": "pipeline_summary", "graph": name, "wave": wave,
+        "speedup_pipelined_vs_stepwise": sw["t_s"] / pl["t_s"],
+        "sync_reduction": sw["host_syncs"] / max(1, pl["host_syncs"]),
+        "bytes_per_step_reduction":
+            sw["bytes_per_step"] / max(1e-9, pl["bytes_per_step"]),
+    })
+    emit("bench_pipeline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

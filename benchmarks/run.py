@@ -1,25 +1,31 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
-full JSON records under benchmarks/results/.  The dry-run / roofline tables
-are produced by ``python -m repro.launch.dryrun`` and
-``python -m benchmarks.roofline`` (they need the 512-device env and are kept
-out of this CPU-timing harness).
+full JSON records under benchmarks/results/.  The wave-engine rows
+(bench_wave + bench_pipeline) are additionally folded into the repo-root
+``BENCH_wave.json`` so the wave-mode perf trajectory is tracked across
+PRs.  The dry-run / roofline tables are produced by
+``python -m repro.launch.dryrun`` and ``python -m benchmarks.roofline``
+(they need the 512-device env and are kept out of this CPU-timing
+harness).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
 
 def main() -> None:
     from benchmarks import (bench_distribution, bench_k, bench_memory,
-                            bench_pruning, bench_queries, bench_span,
-                            bench_wave)
+                            bench_pipeline, bench_pruning, bench_queries,
+                            bench_span, bench_wave)
 
     print("name,us_per_call,derived")
     failures = 0
+    trajectory = {}
 
     def row(name, seconds, derived=""):
         print(f"{name},{seconds * 1e6:.1f},{derived}")
@@ -86,7 +92,9 @@ def main() -> None:
         traceback.print_exc()
 
     try:
-        for r in bench_wave.run():
+        wrows = bench_wave.run()
+        trajectory["wave"] = wrows
+        for r in wrows:
             if r["bench"] == "wave_width":
                 row(f"wave/width{r['wave']}", r["t_s"],
                     f"device_steps={r['device_steps']}")
@@ -96,6 +104,30 @@ def main() -> None:
     except Exception:
         failures += 1
         traceback.print_exc()
+
+    try:
+        prows = bench_pipeline.run()
+        trajectory["pipeline"] = prows
+        for r in prows:
+            if r["bench"] == "pipeline":
+                row(f"pipeline/{r['mode']}", r["t_s"],
+                    f"steps={r['device_steps']} syncs={r['host_syncs']} "
+                    f"bytes/step={r['bytes_per_step']:.0f}")
+            else:
+                row("pipeline/speedup", 0.0,
+                    f"pipelined_vs_stepwise="
+                    f"{r['speedup_pipelined_vs_stepwise']:.2f}x")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    # only a complete trajectory may replace the tracked file — a partial
+    # write would clobber the last good cross-PR history
+    if {"wave", "pipeline"} <= trajectory.keys():
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_wave.json")
+        with open(out, "w") as f:
+            json.dump(trajectory, f, indent=1, default=str)
 
     if failures:
         print(f"# {failures} bench module(s) failed", file=sys.stderr)

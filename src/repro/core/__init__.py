@@ -10,6 +10,8 @@ Public API:
 """
 
 from repro.core.baseline import PHCIndex, iphc_query  # noqa: F401
+from repro.core.engine import (WavePipeline, pack_alive_u32,  # noqa: F401
+                               unpack_alive_u32)
 from repro.core.graph import DeviceTEL, TemporalGraph  # noqa: F401
 from repro.core.oracle import brute_force_query, peel_window  # noqa: F401
 from repro.core.otcd import TCQEngine, temporal_kcore_query  # noqa: F401

@@ -34,6 +34,7 @@ from repro.core.graph import TemporalGraph
 from repro.launch.mesh import dp_axes
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
 
 
 class ShardedTEL(NamedTuple):
@@ -192,7 +193,7 @@ def build_wave_step(mesh, *, num_vertices: int, combine: str = "rs_ag",
         n_edges = lax.psum(jnp.sum(ea, axis=1, dtype=jnp.int32), "model")
         lo = lax.pmin(jnp.min(jnp.where(ea, t[None, :], _I32_MAX), axis=1),
                       "model")
-        hi = lax.pmax(jnp.max(jnp.where(ea, t[None, :], jnp.int32(-1)),
+        hi = lax.pmax(jnp.max(jnp.where(ea, t[None, :], _I32_MIN),
                               axis=1), "model")
         return alive, lo, hi, n_edges, iters
 
@@ -241,7 +242,13 @@ class DistributedTCQ:
             p_s=plan.num_pairs_shard))
         self._sh = sh
 
-    def query_wave(self, ts, te, k: int, h: int = 1, alive=None):
+    def query_wave(self, ts, te, k: int, h: int = 1, alive=None, *,
+                   packed: bool = False):
+        """Batched peel over the sharded TEL.  With ``packed=True`` the
+        alive masks come back as [Q, ceil(V/32)] uint32 bitmasks (the
+        engine's packed result-transfer path — 8x less wire than bool
+        masks when the caller only needs them host-side; decode with
+        ``engine.unpack_alive_u32``)."""
         q = len(ts)
         v = self.plan.num_vertices
         if alive is None:
@@ -249,5 +256,12 @@ class DistributedTCQ:
         alive = jax.device_put(alive, self._sh["alive"])
         ts = jax.device_put(jnp.asarray(ts, jnp.int32), self._sh["lane"])
         te = jax.device_put(jnp.asarray(te, jnp.int32), self._sh["lane"])
-        return self.step(*self.arrays, alive, ts, te, jnp.int32(k),
-                         jnp.int32(h))
+        out = self.step(*self.arrays, alive, ts, te, jnp.int32(k),
+                        jnp.int32(h))
+        if packed:
+            from repro.core.engine import pack_alive_u32
+
+            alive_out, lo, hi, ne, iters = out
+            return (pack_alive_u32(alive_out, num_vertices=v),
+                    lo, hi, ne, iters)
+        return out

@@ -1,0 +1,323 @@
+"""Device-resident OTCD wave pipeline — the engine behind ``mode="wave"``.
+
+The seed stepwise wave (`otcd.TCQEngine._run_wave_stepwise`, retained as
+``mode="wave_stepwise"`` for benchmarking) paid three per-step host costs:
+a Python re-stack of W × [V] lane masks into a fresh batch, a blocking
+scalar sync before any host bookkeeping could start, and — per discovered
+core — an immediate full [V]-bool device→host transfer followed by
+``np.flatnonzero``.  This module removes all three:
+
+* **Persistent lane state** — one [W, V] bool buffer lives on device for
+  the whole query and is donated through every ``wave_step``; exhausted
+  lanes are refilled *in place* with ``lax.dynamic_update_index_in_dim``
+  (cold rows from all-ones, warm rows from the best completed row-initial
+  core, per Theorem 1), so lane masks never round-trip through the host.
+
+* **Fused step + packed result transfer** — truncate + frontier peel
+  (edge activity carried in the fixpoint loop), the TTI reduction,
+  per-lane stats, and a ``uint32`` bitmask pack [W, ceil(V/32)] are one
+  jitted program.  Each step syncs one packed array plus four small [W]
+  vectors — O(W·V/32) words instead of O(W·V) bool bytes — and core
+  vertex sets are decoded host-side in a single deferred bulk
+  ``np.unpackbits`` at the end of the query.
+
+* **Software-pipelined dispatch** — the schedule runs on two slots that
+  ping-pong: while slot B's step executes on device, the host retires
+  slot A (pruning Rules 1–3, IntervalSet updates, packed collection),
+  reassembles and re-dispatches A, and only then blocks on B's scalars.
+  Pruning observed by the in-flight slot is thus one step stale — safe,
+  because a stale lane at worst re-induces a core another lane already
+  found, and such duplicates are removed by TTI identity (Property 2)
+  and counted in ``QueryStats.duplicates``.
+
+* **Kernel degree path** — the Pallas ``banded_segsum`` closures (and
+  their k_max band analysis) are built once per ``TCQEngine`` by the
+  dispatching wrapper: compiled Pallas on TPU, XLA segment-sum elsewhere.
+
+The pipeline additionally peels against a *windowed* TEL: every schedule
+cell lies inside the query's [Ts, Te], so ``TCQEngine._window_tel``
+truncates the edge arrays to the window once per query (power-of-two
+buckets, sentinel padding) and per-iteration peel work scales with the
+window's edge count rather than the whole graph's.
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import defaultdict, deque
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.graph import DeviceTEL
+from repro.core.intervals import IntervalSet
+from repro.core.results import CoreResult, QueryStats
+from repro.core.wave import peel_to_fixpoint
+
+_I32_MAX = np.iinfo(np.int32).max
+_I32_MIN = np.iinfo(np.int32).min
+
+
+# ------------------------------------------------------------ bitmask pack
+def packed_width(num_vertices: int) -> int:
+    """uint32 words per packed [V] vertex mask."""
+    return max(1, -(-num_vertices // 32))
+
+
+def _pack_u32(alive: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
+    """[..., V] bool -> [..., ceil(V/32)] uint32; vertex v = bit v%32 of
+    word v//32 (LSB-first, matching np.unpackbits(bitorder="little"))."""
+    w = packed_width(num_vertices)
+    pad = w * 32 - num_vertices
+    a = jnp.pad(alive, [(0, 0)] * (alive.ndim - 1) + [(0, pad)])
+    a = a.reshape(a.shape[:-1] + (w, 32)).astype(jnp.uint32)
+    return jnp.sum(a << jnp.arange(32, dtype=jnp.uint32), axis=-1,
+                   dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices",))
+def pack_alive_u32(alive: jnp.ndarray, *, num_vertices: int) -> jnp.ndarray:
+    """Standalone jitted pack (used by the distributed engine's packed
+    result transfer; ``wave_step`` fuses the same computation inline)."""
+    return _pack_u32(alive, num_vertices)
+
+
+def unpack_alive_u32(packed: np.ndarray, num_vertices: int) -> np.ndarray:
+    """Host-side inverse of :func:`pack_alive_u32` — one bulk unpackbits."""
+    packed = np.ascontiguousarray(np.asarray(packed).astype("<u4",
+                                                            copy=False))
+    bits = np.unpackbits(packed.view(np.uint8), axis=-1, bitorder="little")
+    return bits[..., :num_vertices].astype(bool)
+
+
+# ------------------------------------------------------------- fused step
+class StepResult(NamedTuple):
+    alive: jnp.ndarray    # [W, V] bool — the persistent lane buffer
+    packed: jnp.ndarray   # [W, ceil(V/32)] uint32 bitmask of `alive`
+    tti_lo: jnp.ndarray   # [W] int32 (I32_MAX when lane core is empty)
+    tti_hi: jnp.ndarray   # [W] int32 (I32_MIN when lane core is empty)
+    n_edges: jnp.ndarray  # [W] int32
+    iters: jnp.ndarray    # scalar int32 — shared fixpoint iterations
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_vertices", "seg_pair", "seg_vert"),
+                   donate_argnums=(1,))
+def wave_step(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
+              *, num_vertices: int, seg_pair, seg_vert) -> StepResult:
+    """One fused device step: peel W lanes to the fixpoint + TTI + stats +
+    bitmask pack.  ``alive`` is donated — the lane buffer is peeled in
+    place and handed back as ``StepResult.alive``."""
+    alive, ea, iters = peel_to_fixpoint(
+        tel, alive, ts, te, k, h, num_vertices=num_vertices,
+        seg_pair=seg_pair, seg_vert=seg_vert)
+    n_edges = jnp.sum(ea, axis=1, dtype=jnp.int32)
+    tti_lo = jnp.min(jnp.where(ea, tel.t[None, :], _I32_MAX), axis=1)
+    tti_hi = jnp.max(jnp.where(ea, tel.t[None, :], _I32_MIN), axis=1)
+    return StepResult(alive, _pack_u32(alive, num_vertices),
+                      tti_lo, tti_hi, n_edges, iters)
+
+
+# ---------------------------------------------------------- lane refills
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _set_lane(buf: jnp.ndarray, li, row: jnp.ndarray) -> jnp.ndarray:
+    """In-place (donated) overwrite of lane ``li`` with a device row."""
+    return lax.dynamic_update_index_in_dim(buf, row, li, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("value",), donate_argnums=(0,))
+def _fill_lane(buf: jnp.ndarray, li, value: bool) -> jnp.ndarray:
+    """In-place (donated) fill of lane ``li`` with a constant mask."""
+    row = jnp.full((buf.shape[1],), value, dtype=bool)
+    return lax.dynamic_update_index_in_dim(buf, row, li, 0)
+
+
+# -------------------------------------------------------------- scheduler
+class _Row:
+    """Cursor of one schedule row: cells (i, j) swept right-to-left."""
+
+    __slots__ = ("i", "j", "first")
+
+    def __init__(self, i: int, n: int):
+        self.i, self.j, self.first = i, n - 1, True
+
+
+class _Slot:
+    """One pipeline stage: a device lane buffer + its in-flight step."""
+
+    __slots__ = ("buf", "rows", "dirty", "inflight")
+
+    def __init__(self, wave: int, num_vertices: int):
+        self.buf = jnp.zeros((wave, num_vertices), dtype=bool)
+        self.rows: List[Optional[_Row]] = [None] * wave
+        self.dirty: set = set()   # lanes holding a stale (dead) mask
+        self.inflight: Optional[StepResult] = None
+
+
+class WavePipeline:
+    """Two-slot software-pipelined OTCD scheduler over :func:`wave_step`.
+
+    Shared bookkeeping (pruned IntervalSets per row, the empty-cell
+    staircase, warm-start rows) mirrors the serial engine; result
+    collection stores packed bitmask rows and defers vertex decoding to
+    one bulk unpack at the end of the query.
+    """
+
+    def __init__(self, tel: DeviceTEL, num_vertices: int,
+                 seg_pair, seg_vert, wave: int):
+        self.tel = tel
+        self.num_vertices = num_vertices
+        self.seg_pair = seg_pair
+        self.seg_vert = seg_vert
+        self.wave = wave
+
+    def run(self, uts: np.ndarray, k: int, h: int, prune: bool,
+            stats: QueryStats) -> Dict[Tuple[int, int], CoreResult]:
+        n = uts.size
+        W = self.wave
+        idx_of = {int(t): i for i, t in enumerate(uts)}
+        pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
+        empty_marks: List[Tuple[int, int]] = []
+        best_init: Optional[Tuple[int, int, jnp.ndarray]] = None
+        pending = deque(range(n))
+        # tti key -> (packed uint32 row, n_edges) — decoded in bulk at the end
+        collected: Dict[Tuple[int, int], Tuple[np.ndarray, int]] = {}
+        kj, hj = jnp.int32(k), jnp.int32(h)
+
+        def empty_bound(r: int) -> int:
+            return max((je for ie, je in empty_marks if ie <= r), default=-1)
+
+        def advance(row: _Row) -> bool:
+            """Move cursor past pruned/empty cells; False once exhausted."""
+            j = pruned[row.i].highest_uncovered_leq(row.j)
+            if j is None or j < row.i or j <= empty_bound(row.i):
+                return False
+            row.j = j
+            return True
+
+        def assemble(slot: _Slot) -> None:
+            """Claim pending rows into free lanes and refill their masks."""
+            for li in range(W):
+                if slot.rows[li] is not None:
+                    continue
+                row = None
+                while pending:
+                    cand = _Row(pending.popleft(), n)
+                    if advance(cand):
+                        row = cand
+                        break
+                if row is None:
+                    break
+                slot.rows[li] = row
+                if (best_init is not None and best_init[0] <= row.i
+                        and best_init[1] >= row.j):
+                    slot.buf = _set_lane(slot.buf, li, best_init[2])
+                else:
+                    slot.buf = _fill_lane(slot.buf, li, True)
+                slot.dirty.discard(li)
+                stats.lane_refills += 1
+            # lanes that died and were not re-claimed: zero once so the
+            # shared fixpoint loop never spends iterations peeling them
+            for li in sorted(slot.dirty):
+                slot.buf = _fill_lane(slot.buf, li, False)
+            slot.dirty.clear()
+
+        def dispatch(slot: _Slot) -> None:
+            occupied = [li for li in range(W) if slot.rows[li] is not None]
+            if not occupied:
+                slot.inflight = None
+                return
+            ts_arr = np.zeros(W, np.int32)
+            te_arr = np.full(W, -1, np.int32)
+            for li in occupied:
+                ts_arr[li] = int(uts[slot.rows[li].i])
+                te_arr[li] = int(uts[slot.rows[li].j])
+            slot.inflight = wave_step(
+                self.tel, slot.buf, jnp.asarray(ts_arr), jnp.asarray(te_arr),
+                kj, hj, num_vertices=self.num_vertices,
+                seg_pair=self.seg_pair, seg_vert=self.seg_vert)
+            slot.buf = slot.inflight.alive   # donated through; new handle
+            stats.device_steps += 1
+            stats.cells_evaluated += len(occupied)
+
+        def retire(slot: _Slot) -> None:
+            nonlocal best_init
+            res = slot.inflight
+            slot.inflight = None
+            packed, lo, hi, ne, it = jax.device_get(
+                (res.packed, res.tti_lo, res.tti_hi, res.n_edges, res.iters))
+            stats.host_syncs += 1
+            stats.bytes_synced += (packed.nbytes + lo.nbytes + hi.nbytes
+                                   + ne.nbytes + it.nbytes)
+            stats.peel_iters += int(it)
+            for li in range(W):
+                row = slot.rows[li]
+                if row is None:
+                    continue
+                i, j = row.i, row.j
+                if int(ne[li]) == 0:
+                    empty_marks.append((i, j))   # staircase: row exhausted
+                    slot.rows[li] = None
+                    slot.dirty.add(li)
+                    continue
+                a_idx = idx_of[int(lo[li])]
+                b_idx = idx_of[int(hi[li])]
+                key = (int(lo[li]), int(hi[li]))
+                if key in collected:
+                    stats.duplicates += 1
+                else:
+                    collected[key] = (packed[li].copy(), int(ne[li]))
+                if row.first and (best_init is None or j >= best_init[1]):
+                    best_init = (i, j, res.alive[li])
+                row.first = False
+                if prune:
+                    if b_idx < j:                        # Rule 1: PoR
+                        stats.por_triggers += 1
+                        stats.pruned_por += pruned[i].add(b_idx, j - 1)
+                    if a_idx > i:                        # Rule 2: PoU
+                        stats.pou_triggers += 1
+                        for r2 in range(i + 1, a_idx + 1):
+                            stats.pruned_pou += pruned[r2].add(r2, j)
+                    if a_idx > i and b_idx < j:          # Rule 3: PoL
+                        stats.pol_triggers += 1
+                        for r2 in range(a_idx + 1, b_idx + 1):
+                            stats.pruned_pol += pruned[r2].add(b_idx + 1, j)
+                    row.j = (b_idx - 1) if b_idx < j else j - 1
+                else:
+                    row.j = j - 1
+                if not advance(row):
+                    slot.rows[li] = None
+                    slot.dirty.add(li)
+
+        # prime both slots, then ping-pong: retire+reassemble+redispatch one
+        # slot while the other's step is still executing on device — the
+        # host's pruning bookkeeping overlaps device compute, and a step is
+        # always dispatched before we block on the previous step's scalars
+        slots = [_Slot(W, self.num_vertices), _Slot(W, self.num_vertices)]
+        for slot in slots:
+            assemble(slot)
+            dispatch(slot)
+        cur = 0
+        while slots[0].inflight is not None or slots[1].inflight is not None:
+            slot = slots[cur]
+            if slot.inflight is not None:
+                retire(slot)
+                assemble(slot)
+                dispatch(slot)
+            cur ^= 1
+
+        # deferred bulk decode: one unpackbits over every collected core
+        results: Dict[Tuple[int, int], CoreResult] = {}
+        if collected:
+            keys = list(collected.keys())
+            bits = unpack_alive_u32(
+                np.stack([collected[key][0] for key in keys]),
+                self.num_vertices)
+            for key, row_bits in zip(keys, bits):
+                results[key] = CoreResult(
+                    k=k, tti=key, vertices=np.flatnonzero(row_bits),
+                    n_edges=collected[key][1])
+        return results

@@ -130,9 +130,16 @@ class TemporalGraph:
         amortized over the batch.  Timestamps may be arbitrary (late data is
         allowed — stricter than the paper, which assumes monotone arrival).
         """
-        u_all = np.concatenate([self.src, np.asarray(u, dtype=np.int32)])
-        v_all = np.concatenate([self.dst, np.asarray(v, dtype=np.int32)])
-        t_all = np.concatenate([self.t, np.asarray(t, dtype=np.int32)])
+        u = np.asarray(u, dtype=np.int32)
+        v = np.asarray(v, dtype=np.int32)
+        t = np.asarray(t, dtype=np.int32)
+        if not (u.shape == v.shape == t.shape):
+            raise ValueError("u, v, t must have identical shapes")
+        if u.size == 0:
+            return self
+        u_all = np.concatenate([self.src, u])
+        v_all = np.concatenate([self.dst, v])
+        t_all = np.concatenate([self.t, t])
         n_vert = max(self.num_vertices, int(max(np.max(u), np.max(v))) + 1)
         return TemporalGraph.from_edges(u_all, v_all, t_all, n_vert)
 

@@ -1,4 +1,4 @@
-"""TCD / OTCD query algorithms (paper §3–§4) and the batched wave engine.
+"""TCD / OTCD query scheduling (paper §3–§4) over the device engines.
 
 The schedule bookkeeping (which (ts, te) cells remain, per the three pruning
 rules) is inherently sequential, tiny, and lives on host.  Every TCD
@@ -8,6 +8,20 @@ dynamic window/threshold scalars — one compilation serves the whole query.
 Enumeration is over *unique* timestamps inside [Ts, Te] (column index space);
 cells between adjacent real timestamps are exact duplicates of their
 right-snap and are never scheduled (a strict, exact strengthening of PoR).
+
+Three execution modes share that schedule:
+
+* ``serial`` — paper-faithful: one cell per device program (`tcd.tcd`),
+  decremental warm starts along each row (Theorem 1).
+* ``wave`` — the device-resident pipeline (`engine.WavePipeline`): a
+  persistent donated [W, V] lane buffer, one fused ``wave_step`` (peel +
+  TTI + stats + uint32 bitmask pack) per batch of schedule cells, packed
+  O(W·V/32) result transfer with deferred bulk decode, and two-slot
+  software pipelining so host pruning bookkeeping overlaps device compute.
+  The Pallas ``banded_segsum`` degree closures are built once per engine.
+* ``wave_stepwise`` — the seed batched engine, retained as the benchmark
+  baseline for the pipeline (one host round-trip per step, per-core [V]
+  bool transfers, re-stacked lane batches).
 """
 
 from __future__ import annotations
@@ -20,22 +34,98 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tcd as tcd_mod
-from repro.core.graph import TemporalGraph
+from repro.core.engine import WavePipeline
+from repro.core.graph import DeviceTEL, TemporalGraph
 from repro.core.intervals import IntervalSet
 from repro.core.results import CoreResult, QueryStats, TCQResult
+from repro.core.wave import make_segsum_fns
 
 _I32_MAX = np.iinfo(np.int32).max
+_WINDOW_CACHE_MAX = 64
 
 
 class TCQEngine:
-    """Holds the device TEL + compiled TCD programs for one temporal graph."""
+    """Holds the device TEL + compiled TCD programs for one temporal graph.
 
-    def __init__(self, graph: TemporalGraph, degree_fn=None):
+    ``use_kernel`` selects the batched degree path for wave mode: True
+    forces the Pallas banded kernel (interpret mode off-TPU), False the
+    XLA segment-sum reference, None (default) auto-dispatches.  The
+    closures — including the kernel's k_max band analysis — are built
+    once here and reused by every wave query on this engine.
+    """
+
+    def __init__(self, graph: TemporalGraph, degree_fn=None, *,
+                 use_kernel: Optional[bool] = None):
+        from repro.kernels.segdeg.ops import on_tpu
+
         self.graph = graph
         self.tel = graph.device_tel()
         self.num_vertices = graph.num_vertices
         self._degree_fn = degree_fn
         self._ones = jnp.ones((graph.num_vertices,), dtype=bool)
+        self._use_kernel = on_tpu() if use_kernel is None else use_kernel
+        self._seg_pair, self._seg_vert = make_segsum_fns(
+            graph, use_kernel=self._use_kernel)
+        self._win_cache: Dict[Tuple[int, int], Tuple[DeviceTEL, object]] = {}
+
+    # -------------------------------------------------------- window slicing
+    def _window_tel(self, Ts: int, Te: int):
+        """Device TEL truncated to [Ts, Te] for the wave pipeline.
+
+        Every cell of a query's schedule lies inside [Ts, Te], so the wave
+        engine peels against only the window's edges — per-iteration work
+        scales with the window, not the whole graph.  Edge arrays are
+        padded to a power-of-two bucket with sentinel edges (t=-1,
+        pair_id=P, ignored by both degree paths), so compiled programs are
+        shared across windows of similar size; the vertex-side segsum
+        closure is window-independent and always reused.  On the XLA
+        degree path the pair-side closure is reused too (it only fixes
+        num_segments); the Pallas path rebuilds it because its k_max band
+        analysis depends on the windowed segment ids.
+        """
+        key = (int(Ts), int(Te))
+        hit = self._win_cache.get(key)
+        if hit is not None:
+            return hit
+        g = self.graph
+        idx = np.flatnonzero((g.t >= Ts) & (g.t <= Te))
+        e = int(idx.size)
+        if e >= g.num_edges:
+            out = (self.tel, self._seg_pair)
+        else:
+            bucket = max(128, 1 << max(0, e - 1).bit_length())
+            pad = bucket - e
+            p = g.num_pairs
+            # sentinel timestamp must be below every representable window
+            # (t = -1 would collide with graphs using negative timestamps)
+            t_pad = np.iinfo(np.int32).min
+            t_w = np.concatenate([g.t[idx], np.full(pad, t_pad, np.int32)])
+            pid_w = np.concatenate([g.pair_id[idx], np.full(pad, p, np.int32)])
+            tel = DeviceTEL(
+                src=jnp.asarray(np.concatenate(
+                    [g.src[idx], np.zeros(pad, np.int32)])),
+                dst=jnp.asarray(np.concatenate(
+                    [g.dst[idx], np.zeros(pad, np.int32)])),
+                t=jnp.asarray(t_w),
+                pair_id=jnp.asarray(pid_w),
+                pair_u=self.tel.pair_u,
+                pair_v=self.tel.pair_v,
+                hp_src=self.tel.hp_src,
+                hp_pair=self.tel.hp_pair,
+                time_perm=jnp.asarray(
+                    np.argsort(t_w, kind="stable").astype(np.int32)),
+            )
+            if self._use_kernel:
+                from repro.kernels.segdeg.ops import make_banded_segsum
+
+                seg_pair = make_banded_segsum(pid_w, p, use_kernel=True)
+            else:
+                seg_pair = self._seg_pair
+            out = (tel, seg_pair)
+        if len(self._win_cache) >= _WINDOW_CACHE_MAX:
+            self._win_cache.pop(next(iter(self._win_cache)))
+        self._win_cache[key] = out
+        return out
 
     # ------------------------------------------------------------- primitives
     def _tcd(self, alive, ts, te, k, h):
@@ -56,8 +146,10 @@ class TCQEngine:
         """All distinct temporal k-cores over subintervals of [Ts, Te].
 
         algorithm: "otcd" (TTI pruning, §4) or "tcd" (full enumeration, §3).
-        mode: "serial" (paper-faithful) or "wave" (beyond-paper batched
-        engine — up to ``wave`` schedule cells peeled per device step).
+        mode: "serial" (paper-faithful), "wave" (device-resident pipelined
+        engine — up to ``wave`` schedule cells per fused device step, two
+        steps in flight), or "wave_stepwise" (the seed batched engine,
+        kept as the benchmark baseline).
         h: link-strength lower bound (paper §6.2); 1 = plain TCQ.
         min_span/max_span: time-span constraint (paper §6.2), applied on the
         fly; pruning stays exact because it is TTI-based.
@@ -70,8 +162,18 @@ class TCQEngine:
         if n == 0:
             return TCQResult([], stats)
         prune = algorithm == "otcd"
+        if mode == "wave" and self._degree_fn is not None:
+            # custom degree semantics are only plumbed through the
+            # scalar/vmapped TCD path; run the stepwise engine (which
+            # honors degree_fn) rather than silently ignoring the override
+            mode = "wave_stepwise"
         if mode == "wave":
-            cores = self._run_wave(uts, k, h, prune, wave, stats)
+            tel_w, seg_pair_w = self._window_tel(int(uts[0]), int(uts[-1]))
+            pipe = WavePipeline(tel_w, self.num_vertices,
+                                seg_pair_w, self._seg_vert, wave)
+            cores = pipe.run(uts, k, h, prune, stats)
+        elif mode == "wave_stepwise":
+            cores = self._run_wave_stepwise(uts, k, h, prune, wave, stats)
         else:
             cores = self._run_serial(uts, k, h, prune, stats)
         out = list(cores.values())
@@ -146,9 +248,12 @@ class TCQEngine:
                     j = j - 1
         return results
 
-    # ------------------------------------------------------------- wave mode
-    def _run_wave(self, uts, k, h, prune, wave, stats):
-        """Beyond-paper: peel up to ``wave`` schedule cells per device step.
+    # ------------------------------------------- stepwise wave (seed baseline)
+    def _run_wave_stepwise(self, uts, k, h, prune, wave, stats):
+        """Seed batched engine: up to ``wave`` cells per device step, with a
+        blocking host round-trip between steps and per-core [V] bool
+        transfers.  Retained as the measured baseline for the pipelined
+        engine (see engine.WavePipeline and benchmarks/bench_pipeline.py).
 
         Rows advance concurrently; pruning triggered by any lane applies to
         all not-yet-evaluated cells (lanes already in flight may compute a
@@ -219,6 +324,8 @@ class TCQEngine:
             n_edges = np.asarray(res.n_edges)
             tti_lo = np.asarray(res.tti_lo)
             tti_hi = np.asarray(res.tti_hi)
+            stats.host_syncs += 3
+            stats.bytes_synced += n_edges.nbytes + tti_lo.nbytes + tti_hi.nbytes
             survivors: List[Row] = []
             for li, row in enumerate(lanes):
                 i, j = row.i, row.j
@@ -260,7 +367,10 @@ class TCQEngine:
         if key in results:
             stats.duplicates += 1
             return
-        verts = np.flatnonzero(np.asarray(res.alive))
+        alive = np.asarray(res.alive)          # full [V] bool transfer
+        stats.host_syncs += 1
+        stats.bytes_synced += alive.nbytes
+        verts = np.flatnonzero(alive)
         results[key] = CoreResult(k=k, tti=key, vertices=verts,
                                   n_edges=int(res.n_edges))
 

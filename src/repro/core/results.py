@@ -49,6 +49,10 @@ class QueryStats:
     pruned_pol: int = 0
     pruned_empty: int = 0
     device_steps: int = 0
+    host_syncs: int = 0           # blocking device->host sync points
+    bytes_synced: int = 0         # total device->host result payload
+    lane_refills: int = 0         # in-place lane buffer refills (wave mode)
+    peel_iters: int = 0           # shared fixpoint iterations (wave mode)
     wall_time_s: float = 0.0
 
     @property

@@ -26,12 +26,13 @@ from jax import lax
 from repro.core.graph import DeviceTEL
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
 
 
 class TCDResult(NamedTuple):
     alive: jnp.ndarray    # [V] bool — vertices of T^k_[ts,te]
     tti_lo: jnp.ndarray   # scalar int32 (I32_MAX when core is empty)
-    tti_hi: jnp.ndarray   # scalar int32 (-1 when core is empty)
+    tti_hi: jnp.ndarray   # scalar int32 (I32_MIN when core is empty)
     n_edges: jnp.ndarray  # scalar int32
     n_verts: jnp.ndarray  # scalar int32
 
@@ -71,21 +72,27 @@ def tcd(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
     """
     dfn = degree_fn or degrees
 
+    # edge activity rides in the carry: the final loop iteration observes
+    # new == cur, so the ea it computed is exactly ea(fixpoint) and the
+    # post-loop edge pass is saved (one full [E] evaluation per cell)
     def body(state):
-        cur, _ = state
+        cur, _, _ = state
         ea = edge_activity(tel, cur, ts, te)
         deg = dfn(tel, ea, h, num_vertices=num_vertices)
         new = cur & (deg >= k)
-        return new, jnp.any(new != cur)
+        return new, ea, jnp.any(new != cur)
 
     def cond(state):
-        return state[1]
+        return state[2]
 
-    alive, _ = lax.while_loop(cond, body, (alive, jnp.bool_(True)))
-    ea = edge_activity(tel, alive, ts, te)
+    ea0 = jnp.zeros(tel.t.shape, dtype=bool)
+    alive, ea, _ = lax.while_loop(cond, body, (alive, ea0, jnp.bool_(True)))
     n_edges = jnp.sum(ea, dtype=jnp.int32)
+    # empty-fill sentinels must sit outside the timestamp range in BOTH
+    # directions (-1 would clamp tti_hi for cores whose edges all have
+    # t < -1 — timestamps may be arbitrary ints)
     tti_lo = jnp.min(jnp.where(ea, tel.t, _I32_MAX))
-    tti_hi = jnp.max(jnp.where(ea, tel.t, jnp.int32(-1)))
+    tti_hi = jnp.max(jnp.where(ea, tel.t, _I32_MIN))
     # at the fixpoint every alive vertex has degree >= k (>= 1), so the
     # vertex count needs no extra reduction pass
     n_verts = jnp.sum(alive, dtype=jnp.int32)

@@ -3,9 +3,11 @@
 `tcd_batch` (tcd.py) vmaps the scalar path; this module lays the data out
 the way the MXU wants it — values [E, Q] / [2P, Q] — so the two segment
 reductions become banded one-hot matmuls (the Pallas kernel), and the whole
-wave shares one fixpoint loop.  This is also the single-shard block of the
-distributed engine (distributed.py wraps it in shard_map with a cross-shard
-degree combine).
+wave shares one fixpoint loop.  The edge-activity / degree split lets
+callers (engine.py's fused ``wave_step``) carry edge activity through the
+fixpoint loop and skip the post-loop edge pass.  This is also the
+single-shard block of the distributed engine (distributed.py wraps it in
+shard_map with a cross-shard degree combine).
 """
 
 from __future__ import annotations
@@ -21,6 +23,7 @@ from jax import lax
 from repro.core.graph import DeviceTEL, TemporalGraph
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
 
 
 class WaveResult(NamedTuple):
@@ -32,15 +35,19 @@ class WaveResult(NamedTuple):
     iters: jnp.ndarray    # scalar: fixpoint iterations of the wave
 
 
-def make_segsum_fns(graph: TemporalGraph, *, use_kernel: bool = False,
+def make_segsum_fns(graph: TemporalGraph, *, use_kernel: Optional[bool] = None,
                     interpret: Optional[bool] = None):
     """(edges->pairs, halfpairs->vertices) segment-sum closures for a graph.
 
     use_kernel=True routes through the Pallas banded kernel (interpret mode
-    on CPU); False uses jax.ops.segment_sum (XLA scatter path).
+    on CPU); False uses jax.ops.segment_sum (XLA scatter path); None (the
+    default) auto-dispatches — compiled Pallas on TPU, XLA elsewhere.  The
+    band analysis (k_max) runs here, once per graph/engine.
     """
-    from repro.kernels.segdeg.ops import make_banded_segsum
+    from repro.kernels.segdeg.ops import make_banded_segsum, on_tpu
 
+    if use_kernel is None:
+        use_kernel = on_tpu()
     tel_hp_src = np.sort(np.concatenate([graph.pair_u, graph.pair_v]))
     seg_pair = make_banded_segsum(graph.pair_id, graph.num_pairs,
                                   use_kernel=use_kernel, interpret=interpret)
@@ -49,17 +56,64 @@ def make_segsum_fns(graph: TemporalGraph, *, use_kernel: bool = False,
     return seg_pair, seg_vert
 
 
-def wave_degrees(tel: DeviceTEL, alive: jnp.ndarray, ts, te, h,
-                 *, num_vertices: int, seg_pair: Callable, seg_vert: Callable
-                 ) -> jnp.ndarray:
-    """alive: [Q, V]; ts/te: [Q].  Returns [Q, V] int32 degrees."""
+def wave_edge_activity(tel: DeviceTEL, alive: jnp.ndarray, ts, te
+                       ) -> jnp.ndarray:
+    """alive: [Q, V]; ts/te: [Q].  Returns [Q, E] bool edge activity."""
     win = (tel.t[None, :] >= ts[:, None]) & (tel.t[None, :] <= te[:, None])
-    ea = win & alive[:, tel.src] & alive[:, tel.dst]          # [Q, E]
+    return win & alive[:, tel.src] & alive[:, tel.dst]
+
+
+def wave_degrees_from_ea(tel: DeviceTEL, ea: jnp.ndarray, h,
+                         *, num_vertices: int, seg_pair: Callable,
+                         seg_vert: Callable) -> jnp.ndarray:
+    """ea: [Q, E] edge activity.  Returns [Q, V] int32 degrees."""
     paircnt = seg_pair(ea.T.astype(jnp.float32), tel.pair_id)  # [P, Q]
     pairact = (paircnt >= h).astype(jnp.float32)
     contrib = pairact[tel.hp_pair, :]                          # [2P, Q]
     deg = seg_vert(contrib, tel.hp_src)                        # [V, Q]
     return deg.T.astype(jnp.int32)
+
+
+def wave_degrees(tel: DeviceTEL, alive: jnp.ndarray, ts, te, h,
+                 *, num_vertices: int, seg_pair: Callable, seg_vert: Callable
+                 ) -> jnp.ndarray:
+    """alive: [Q, V]; ts/te: [Q].  Returns [Q, V] int32 degrees."""
+    ea = wave_edge_activity(tel, alive, ts, te)
+    return wave_degrees_from_ea(tel, ea, h, num_vertices=num_vertices,
+                                seg_pair=seg_pair, seg_vert=seg_vert)
+
+
+def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
+                     *, num_vertices: int, seg_pair, seg_vert,
+                     max_iters: int = 0):
+    """Shared batched peel loop -> (alive, ea, iters); trace-time building
+    block for `tcd_wave` and engine.wave_step.
+
+    ea rides in the carry (as in tcd.tcd): the final iteration observed
+    new == cur, so the carried ea is exactly the fixpoint's edge activity
+    and callers skip the post-loop edge pass.
+    """
+    def cond(state):
+        _, _, changed, it = state
+        more = changed
+        if max_iters:
+            more = more & (it < max_iters)
+        return more
+
+    def body(state):
+        cur, _, _, it = state
+        ea = wave_edge_activity(tel, cur, ts, te)
+        deg = wave_degrees_from_ea(tel, ea, h, num_vertices=num_vertices,
+                                   seg_pair=seg_pair, seg_vert=seg_vert)
+        new = cur & (deg >= k)
+        return new, ea, jnp.any(new != cur), it + 1
+
+    ea0 = jnp.zeros((alive.shape[0], tel.t.shape[0]), dtype=bool)
+    alive, ea, _, iters = lax.while_loop(
+        cond, body, (alive, ea0, jnp.bool_(True), jnp.int32(0)))
+    if max_iters:  # truncated peel may exit pre-fixpoint: ea would be stale
+        ea = wave_edge_activity(tel, alive, ts, te)
+    return alive, ea, iters
 
 
 @functools.partial(jax.jit, static_argnames=("num_vertices", "seg_pair",
@@ -68,28 +122,11 @@ def tcd_wave(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
              *, num_vertices: int, seg_pair, seg_vert,
              max_iters: int = 0) -> WaveResult:
     """Batched TCD to the fixpoint.  alive: [Q, V] warm-start supersets."""
-    deg_fn = functools.partial(wave_degrees, tel, num_vertices=num_vertices,
-                               seg_pair=seg_pair, seg_vert=seg_vert)
-
-    def cond(state):
-        _, changed, it = state
-        more = changed
-        if max_iters:
-            more = more & (it < max_iters)
-        return more
-
-    def body(state):
-        cur, _, it = state
-        deg = deg_fn(cur, ts, te, h)
-        new = cur & (deg >= k)
-        return new, jnp.any(new != cur), it + 1
-
-    alive, _, iters = lax.while_loop(
-        cond, body, (alive, jnp.bool_(True), jnp.int32(0)))
-    win = (tel.t[None, :] >= ts[:, None]) & (tel.t[None, :] <= te[:, None])
-    ea = win & alive[:, tel.src] & alive[:, tel.dst]
+    alive, ea, iters = peel_to_fixpoint(
+        tel, alive, ts, te, k, h, num_vertices=num_vertices,
+        seg_pair=seg_pair, seg_vert=seg_vert, max_iters=max_iters)
     n_edges = jnp.sum(ea, axis=1, dtype=jnp.int32)
     tti_lo = jnp.min(jnp.where(ea, tel.t[None, :], _I32_MAX), axis=1)
-    tti_hi = jnp.max(jnp.where(ea, tel.t[None, :], jnp.int32(-1)), axis=1)
+    tti_hi = jnp.max(jnp.where(ea, tel.t[None, :], _I32_MIN), axis=1)
     n_verts = jnp.sum(alive, axis=1, dtype=jnp.int32)
     return WaveResult(alive, tti_lo, tti_hi, n_edges, n_verts, iters)

@@ -81,6 +81,8 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, smoke: bool = False,
         t_compile = time.perf_counter() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_rec = {

@@ -243,16 +243,25 @@ def analyze_computation(text: str, shape_table: Dict[str, str]) -> CompCost:
             out = float(sum(_shape_elems(d)
                             for _, d in _SHAPE_RE.findall(out_text)))
             cm = _CONTRACT_RE.search(s)
-            lhs_name = re.search(r"dot\(\s*%([\w\.\-]+)", s)
+            # lhs operand is either inline-typed ("dot(f32[a,b]{..} %x, ...")
+            # or a bare "%x" resolved through the definition table
+            lhs_dims: List[int] = []
+            lhs_inline = re.search(r"dot\(\s*[a-z][a-z0-9]*\[([0-9,]*)\]", s)
+            if lhs_inline:
+                lhs_dims = [int(x) for x in lhs_inline.group(1).split(",")
+                            if x]
+            else:
+                lhs_name = re.search(r"dot\(\s*%([\w\.\-]+)", s)
+                if lhs_name:
+                    lhs_shapes = _SHAPE_RE.findall(resolve(lhs_name.group(1)))
+                    if lhs_shapes:
+                        lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",")
+                                    if x]
             k = 1.0
-            if cm and lhs_name:
-                lhs_shapes = _SHAPE_RE.findall(resolve(lhs_name.group(1)))
-                if lhs_shapes:
-                    lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",")
-                                if x]
-                    for cd in [int(x) for x in cm.group(1).split(",") if x]:
-                        if cd < len(lhs_dims):
-                            k *= lhs_dims[cd]
+            if cm and lhs_dims:
+                for cd in [int(x) for x in cm.group(1).split(",") if x]:
+                    if cd < len(lhs_dims):
+                        k *= lhs_dims[cd]
             c.flops += 2.0 * out * k
             c.bytes += (_shapes_bytes(out_text)
                         + operand_bytes_of(s, om.end()))

@@ -1,0 +1,100 @@
+"""Seeded fallback for ``hypothesis`` (vendored, minimal).
+
+The property suites import ``given``/``settings``/``strategies`` from here
+via a guarded import: when the real hypothesis package is installed it is
+used unchanged; in hermetic environments without it this shim keeps the
+suites runnable instead of erroring at collection.
+
+Only the API surface the tests use is implemented — ``integers``,
+``tuples``, ``lists``, ``composite`` strategies plus the ``@given`` /
+``@settings`` decorators.  Examples are drawn from a numpy Generator
+seeded by the test name (crc32), so runs are reproducible and failures
+can be replayed.  There is no shrinking and no example database.
+
+Example counts are capped (``REPRO_FALLBACK_MAX_EXAMPLES``, default 8):
+every distinct random graph shape recompiles the jitted TCD program on
+CPU, so the full hypothesis budgets would dominate suite wall time.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+
+import numpy as np
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a numpy Generator."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def tuples(*elements: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(s.draw(rng) for s in elements))
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size: int = 0,
+              max_size: int = None) -> SearchStrategy:
+        hi = min_size + 10 if max_size is None else max_size
+
+        def draw(rng):
+            n = int(rng.integers(min_size, hi + 1))
+            return [elements.draw(rng) for _ in range(n)]
+
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        def build(*args, **kwargs):
+            return SearchStrategy(
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs))
+
+        return build
+
+
+st = strategies
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    """Records the example budget on the (already ``@given``-wrapped) test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    cap = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "8"))
+
+    def deco(fn):
+        # NOT functools.wraps: pytest would follow __wrapped__ to the
+        # original signature and treat the drawn parameters as fixtures
+        def wrapper():
+            n = min(getattr(wrapper, "_fallback_max_examples", 10), cap)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(max(1, n)):
+                fn(*(s.draw(rng) for s in strats))
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

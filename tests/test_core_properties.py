@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) for the paper's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: vendored seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import TCQEngine, TemporalGraph, brute_force_query
 from repro.core.oracle import peel_window

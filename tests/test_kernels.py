@@ -8,7 +8,11 @@ hub segments (band wider than one tile), padding tails, and dtypes.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: vendored seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.segdeg.kernel import banded_segsum_pallas, required_k_max
 from repro.kernels.segdeg.ops import make_banded_segsum
