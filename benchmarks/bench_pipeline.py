@@ -13,13 +13,18 @@ schedule, same wave width:
 The reference workload is a fixed window of the CPU-scaled collegemsg
 analogue (deterministic — no query search loop), chosen to be
 dispatch/transfer-bound like the paper's result-proportional regime.
-Emits rows for benchmarks/results/bench_pipeline.json; run.py folds the
-same rows into the repo-root BENCH_wave.json trajectory file.
+Both modes' result sets are compared core-by-core and the run raises on
+any divergence, so ``python -m benchmarks.run`` exits non-zero if the
+pipelined engine ever drifts from the seed baseline — the bench doubles
+as a regression gate.  Emits rows for
+benchmarks/results/bench_pipeline.json; run.py folds the same rows into
+the repo-root BENCH_wave.json trajectory file.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import GRAPH_K, emit, engine, graph, timeit
+from benchmarks.common import (GRAPH_K, assert_cores_equal, emit, engine,
+                               graph, timeit)
 
 SPAN_UTS = 120      # unique timestamps in the reference window
 START_UTS = 100     # fixed window start (index into unique_ts)
@@ -37,9 +42,11 @@ def run(name: str = "collegemsg", wave: int = 8, repeat: int = 3):
     ts, te = reference_window(name)
     rows = []
     by_mode = {}
+    results = {}
     for mode in ("wave_stepwise", "wave"):
         fn = lambda: eng.query(k, ts, te, mode=mode, wave=wave)  # noqa: E731
         res = fn()                       # warm the compile caches
+        results[mode] = res
         t = timeit(fn, repeat=repeat)
         s = res.stats
         row = {
@@ -54,9 +61,15 @@ def run(name: str = "collegemsg", wave: int = 8, repeat: int = 3):
         }
         rows.append(row)
         by_mode[mode] = row
+    # regression gate: the pipelined engine must return exactly the seed
+    # stepwise engine's result set on the reference workload — a raise
+    # here makes `python -m benchmarks.run` exit non-zero
+    assert_cores_equal(results["wave"], results["wave_stepwise"],
+                       ctx=f"wave vs wave_stepwise on {name}")
     sw, pl = by_mode["wave_stepwise"], by_mode["wave"]
     rows.append({
         "bench": "pipeline_summary", "graph": name, "wave": wave,
+        "equivalent": True,     # the gate above raised otherwise
         "speedup_pipelined_vs_stepwise": sw["t_s"] / pl["t_s"],
         "sync_reduction": sw["host_syncs"] / max(1, pl["host_syncs"]),
         "bytes_per_step_reduction":

@@ -1,0 +1,95 @@
+"""Multi-tenant serving throughput: ``query_batch`` vs sequential loops.
+
+The north star is heavy concurrent query traffic, so the metric here is
+batched *throughput* (queries/sec), not single-query latency: a batch of
+mixed-(k, h, window) requests served through one shared lane pool is
+measured against the same requests answered one at a time — both with the
+paper-faithful serial engine (what ``query()`` runs by default) and with
+the single-query wave pipeline.  The pool wins by keeping the fused step
+full: lanes freed by one query's draining schedule tail are refilled with
+another query's cells (mean cells-per-step occupancy is reported).
+
+The batch's results are checked bit-identical (TTI keys, vertex sets,
+edge counts) to the per-query serial runs and the run *raises* on any
+divergence — run.py turns that into a non-zero exit, so this bench
+doubles as a cross-engine regression gate.  Rows feed
+benchmarks/results/bench_service.json and the BENCH_wave.json ``service``
+trajectory.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (GRAPH_K, assert_cores_equal, emit, engine,
+                               graph, timeit)
+
+N_QUERIES = 8       # concurrent mixed-(k, h) requests in the batch
+SPAN_UTS = 48       # unique timestamps per request window
+START_UTS = 100     # first window start (index into unique_ts)
+STRIDE_UTS = 9      # shift between consecutive request windows
+
+
+def mixed_requests(name: str, n: int = N_QUERIES):
+    """n overlapping windows with heterogeneous (k, h) thresholds."""
+    uts = graph(name).unique_ts
+    k0 = GRAPH_K[name]
+    reqs = []
+    for i in range(n):
+        i0 = min(START_UTS + STRIDE_UTS * i, max(0, uts.size - SPAN_UTS - 1))
+        j0 = min(i0 + SPAN_UTS, uts.size - 1)
+        reqs.append({"k": k0 + (i % 3), "h": (1, 1, 2)[i % 3],
+                     "ts": int(uts[i0]), "te": int(uts[j0])})
+    return reqs
+
+
+def _check_identical(name, reqs, batch_results, serial_results):
+    for r, got, want in zip(reqs, batch_results, serial_results):
+        assert_cores_equal(got, want, ctx=f"service on {name} {r}")
+
+
+def run(name: str = "collegemsg", repeat: int = 2):
+    eng = engine(name)
+    reqs = mixed_requests(name)
+
+    serial_loop = lambda: [eng.query(r["k"], r["ts"], r["te"], h=r["h"])  # noqa: E731
+                           for r in reqs]
+    wave_loop = lambda: [eng.query(r["k"], r["ts"], r["te"], h=r["h"],  # noqa: E731
+                                   mode="wave", wave=8) for r in reqs]
+    batch = lambda: eng.query_batch(reqs)  # noqa: E731
+
+    # warm every compile cache (and grab results for the equivalence gate)
+    serial_res = serial_loop()
+    wave_res = wave_loop()
+    batch_res = batch()
+    _check_identical(name, reqs, batch_res, serial_res)
+    _check_identical(name, reqs, wave_res, serial_res)
+
+    rows = []
+    times = {}
+    for mode, fn in (("serial_loop", serial_loop), ("wave_loop", wave_loop),
+                     ("batch", batch)):
+        t = timeit(fn, repeat=repeat)
+        times[mode] = t
+        rows.append({"bench": "service", "graph": name, "mode": mode,
+                     "n_queries": len(reqs), "t_s": t,
+                     "qps": len(reqs) / t})
+    bs = batch_res[0].stats
+    rows[-1].update({
+        "device_steps": bs.device_steps, "host_syncs": bs.host_syncs,
+        "occupancy": bs.occupancy, "lane_refills": bs.lane_refills,
+        "window_edges": bs.window_edges,
+        "cells": sum(r.stats.cells_evaluated for r in batch_res),
+    })
+    rows.append({
+        "bench": "service_summary", "graph": name, "n_queries": len(reqs),
+        "speedup_batch_vs_serial_loop": times["serial_loop"] / times["batch"],
+        "speedup_batch_vs_wave_loop": times["wave_loop"] / times["batch"],
+        "occupancy": bs.occupancy,
+        "equivalent": True,     # _check_identical raised otherwise
+    })
+    emit("bench_service", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

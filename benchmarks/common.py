@@ -70,6 +70,21 @@ def pick_queries(name: str, n: int, span_uts: int = 90, seed: int = 0,
     return out
 
 
+def assert_cores_equal(got, want, ctx: str = "") -> None:
+    """Raise RuntimeError unless two TCQResults hold identical core sets
+    (TTI keys, vertex sets, edge counts) — the cross-engine regression
+    gate shared by bench_pipeline and bench_service."""
+    bg, bw = got.by_tti(), want.by_tti()
+    if bg.keys() != bw.keys():
+        raise RuntimeError(
+            f"result divergence {ctx}: {len(bg)} vs {len(bw)} cores")
+    for key, cw in bw.items():
+        cg = bg[key]
+        if (not np.array_equal(cg.vertices, cw.vertices)
+                or cg.n_edges != cw.n_edges):
+            raise RuntimeError(f"result divergence {ctx} at core {key}")
+
+
 def timeit(fn, repeat: int = 1) -> float:
     best = float("inf")
     for _ in range(repeat):

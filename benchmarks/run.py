@@ -2,9 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 full JSON records under benchmarks/results/.  The wave-engine rows
-(bench_wave + bench_pipeline) are additionally folded into the repo-root
-``BENCH_wave.json`` so the wave-mode perf trajectory is tracked across
-PRs.  The dry-run / roofline tables are produced by
+(bench_wave + bench_pipeline + bench_service) are additionally folded
+into the repo-root ``BENCH_wave.json`` so the wave-mode perf trajectory
+is tracked across PRs; bench_pipeline and bench_service also verify
+cross-engine result equivalence and raise (non-zero exit) on divergence,
+so the harness doubles as a regression gate.  The dry-run / roofline tables are produced by
 ``python -m repro.launch.dryrun`` and ``python -m benchmarks.roofline``
 (they need the 512-device env and are kept out of this CPU-timing
 harness).
@@ -21,7 +23,7 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_distribution, bench_k, bench_memory,
                             bench_pipeline, bench_pruning, bench_queries,
-                            bench_span, bench_wave)
+                            bench_service, bench_span, bench_wave)
 
     print("name,us_per_call,derived")
     failures = 0
@@ -121,9 +123,28 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
 
+    try:
+        srows = bench_service.run()
+        trajectory["service"] = srows
+        for r in srows:
+            if r["bench"] == "service":
+                extra = (f" occ={r['occupancy']:.2f}"
+                         if "occupancy" in r else "")
+                row(f"service/{r['mode']}", r["t_s"],
+                    f"qps={r['qps']:.2f}{extra}")
+            else:
+                row("service/speedup", 0.0,
+                    f"batch_vs_serial_loop="
+                    f"{r['speedup_batch_vs_serial_loop']:.2f}x "
+                    f"batch_vs_wave_loop="
+                    f"{r['speedup_batch_vs_wave_loop']:.2f}x")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
     # only a complete trajectory may replace the tracked file — a partial
     # write would clobber the last good cross-PR history
-    if {"wave", "pipeline"} <= trajectory.keys():
+    if {"wave", "pipeline", "service"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

@@ -16,4 +16,6 @@ from repro.core.graph import DeviceTEL, TemporalGraph  # noqa: F401
 from repro.core.oracle import brute_force_query, peel_window  # noqa: F401
 from repro.core.otcd import TCQEngine, temporal_kcore_query  # noqa: F401
 from repro.core.results import CoreResult, QueryStats, TCQResult  # noqa: F401
+from repro.core.scheduler import (EmptyStaircase, QueryState,  # noqa: F401
+                                  autotune_wave)
 from repro.core.tcd import TCDResult, coreness, tcd, tcd_batch  # noqa: F401

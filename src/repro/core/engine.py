@@ -1,50 +1,60 @@
-"""Device-resident OTCD wave pipeline — the engine behind ``mode="wave"``.
+"""Device-resident multi-tenant wave pipeline — the engine behind
+``mode="wave"`` and ``TCQEngine.query_batch``.
 
-The seed stepwise wave (`otcd.TCQEngine._run_wave_stepwise`, retained as
-``mode="wave_stepwise"`` for benchmarking) paid three per-step host costs:
-a Python re-stack of W × [V] lane masks into a fresh batch, a blocking
-scalar sync before any host bookkeeping could start, and — per discovered
-core — an immediate full [V]-bool device→host transfer followed by
-``np.flatnonzero``.  This module removes all three:
+The pipeline is split in two layers:
 
-* **Persistent lane state** — one [W, V] bool buffer lives on device for
-  the whole query and is donated through every ``wave_step``; exhausted
-  lanes are refilled *in place* with ``lax.dynamic_update_index_in_dim``
-  (cold rows from all-ones, warm rows from the best completed row-initial
-  core, per Theorem 1), so lane masks never round-trip through the host.
+* **Per-query schedule bookkeeping** lives in ``core/scheduler.py``: a
+  :class:`~repro.core.scheduler.QueryState` owns one query's row cursors,
+  IntervalSet pruning (Rules 1–3), empty-cell staircase, warm-start rows
+  (Theorem 1) and TTI dedup (Property 2).
+
+* **The lane pool** (this module) owns the device side: one persistent
+  [W, V] bool buffer whose rows ("lanes") each peel one schedule cell per
+  fused :func:`wave_step`.  The pool draws ready cells round-robin from
+  *any number* of QueryStates, so lanes freed by one query's draining tail
+  are immediately refilled with another query's cells — the fused step
+  stays full under concurrent traffic instead of decaying with a single
+  query's schedule.  ``k``/``h`` ride along as per-lane [W] vectors, so
+  one step carries cells from queries with different thresholds.
+
+Device mechanics (carried over from the single-query pipeline, measured
+3.7x over the seed stepwise engine):
+
+* **Persistent lane state** — the [W, V] buffer is donated through every
+  ``wave_step``; exhausted lanes are refilled *in place* with
+  ``lax.dynamic_update_index_in_dim`` (cold rows from all-ones, warm rows
+  from the owning query's best completed row-initial core), so lane masks
+  never round-trip through the host.
 
 * **Fused step + packed result transfer** — truncate + frontier peel
   (edge activity carried in the fixpoint loop), the TTI reduction,
   per-lane stats, and a ``uint32`` bitmask pack [W, ceil(V/32)] are one
-  jitted program.  Each step syncs one packed array plus four small [W]
-  vectors — O(W·V/32) words instead of O(W·V) bool bytes — and core
-  vertex sets are decoded host-side in a single deferred bulk
-  ``np.unpackbits`` at the end of the query.
+  jitted program; each step syncs one packed array plus four small [W]
+  vectors, and core vertex sets are decoded host-side in one deferred
+  bulk ``np.unpackbits`` per query.
 
-* **Software-pipelined dispatch** — the schedule runs on two slots that
-  ping-pong: while slot B's step executes on device, the host retires
-  slot A (pruning Rules 1–3, IntervalSet updates, packed collection),
-  reassembles and re-dispatches A, and only then blocks on B's scalars.
-  Pruning observed by the in-flight slot is thus one step stale — safe,
-  because a stale lane at worst re-induces a core another lane already
-  found, and such duplicates are removed by TTI identity (Property 2)
-  and counted in ``QueryStats.duplicates``.
+* **Depth-D slot ring** — D lane buffers (default 2) cycle through
+  dispatch: while slots B..D execute on device, the host retires slot A
+  (pruning, packed collection), reassembles and re-dispatches it, then
+  blocks on the next slot's scalars.  Pruning observed by an in-flight
+  slot is thus up to D-1 steps stale — safe, because a stale lane at
+  worst re-induces a core its query already found, and such duplicates
+  are removed by TTI identity (Property 2) and counted per query.
 
 * **Kernel degree path** — the Pallas ``banded_segsum`` closures (and
   their k_max band analysis) are built once per ``TCQEngine`` by the
   dispatching wrapper: compiled Pallas on TPU, XLA segment-sum elsewhere.
 
-The pipeline additionally peels against a *windowed* TEL: every schedule
-cell lies inside the query's [Ts, Te], so ``TCQEngine._window_tel``
-truncates the edge arrays to the window once per query (power-of-two
-buckets, sentinel padding) and per-iteration peel work scales with the
-window's edge count rather than the whole graph's.
+The pipeline peels against a *windowed* TEL (``TCQEngine._window_tel``):
+for a batch, one TEL truncated to the union window serves every lane —
+per-lane ``ts``/``te`` keep each query's exact windowed semantics, so
+cross-query packing is bit-identical to running each query alone.
 """
 
 from __future__ import annotations
 
 import functools
-from collections import defaultdict, deque
+from collections import deque
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -53,8 +63,8 @@ import numpy as np
 from jax import lax
 
 from repro.core.graph import DeviceTEL
-from repro.core.intervals import IntervalSet
 from repro.core.results import CoreResult, QueryStats
+from repro.core.scheduler import QueryState, RowCursor
 from repro.core.wave import peel_to_fixpoint
 
 _I32_MAX = np.iinfo(np.int32).max
@@ -109,8 +119,10 @@ class StepResult(NamedTuple):
 def wave_step(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
               *, num_vertices: int, seg_pair, seg_vert) -> StepResult:
     """One fused device step: peel W lanes to the fixpoint + TTI + stats +
-    bitmask pack.  ``alive`` is donated — the lane buffer is peeled in
-    place and handed back as ``StepResult.alive``."""
+    bitmask pack.  ``ts``/``te``/``k``/``h`` are per-lane [W] vectors —
+    every lane may carry a different query's window and thresholds.
+    ``alive`` is donated — the lane buffer is peeled in place and handed
+    back as ``StepResult.alive``."""
     alive, ea, iters = peel_to_fixpoint(
         tel, alive, ts, te, k, h, num_vertices=num_vertices,
         seg_pair=seg_pair, seg_vert=seg_vert)
@@ -135,90 +147,90 @@ def _fill_lane(buf: jnp.ndarray, li, value: bool) -> jnp.ndarray:
     return lax.dynamic_update_index_in_dim(buf, row, li, 0)
 
 
-# -------------------------------------------------------------- scheduler
-class _Row:
-    """Cursor of one schedule row: cells (i, j) swept right-to-left."""
-
-    __slots__ = ("i", "j", "first")
-
-    def __init__(self, i: int, n: int):
-        self.i, self.j, self.first = i, n - 1, True
-
-
+# -------------------------------------------------------------- lane pool
 class _Slot:
-    """One pipeline stage: a device lane buffer + its in-flight step."""
+    """One ring stage: a device lane buffer + its in-flight step.
 
-    __slots__ = ("buf", "rows", "dirty", "inflight")
+    ``lanes[li]`` holds the (QueryState, RowCursor) the lane is serving,
+    or None when free; ``dirty`` marks lanes holding a stale (dead) mask.
+    """
+
+    __slots__ = ("buf", "lanes", "dirty", "inflight")
 
     def __init__(self, wave: int, num_vertices: int):
         self.buf = jnp.zeros((wave, num_vertices), dtype=bool)
-        self.rows: List[Optional[_Row]] = [None] * wave
-        self.dirty: set = set()   # lanes holding a stale (dead) mask
+        self.lanes: List[Optional[Tuple[QueryState, RowCursor]]] = \
+            [None] * wave
+        self.dirty: set = set()
         self.inflight: Optional[StepResult] = None
 
 
 class WavePipeline:
-    """Two-slot software-pipelined OTCD scheduler over :func:`wave_step`.
+    """Depth-D software-pipelined lane pool over :func:`wave_step`.
 
-    Shared bookkeeping (pruned IntervalSets per row, the empty-cell
-    staircase, warm-start rows) mirrors the serial engine; result
-    collection stores packed bitmask rows and defers vertex decoding to
-    one bulk unpack at the end of the query.
+    :meth:`run_pool` serves any number of QueryStates through one shared
+    lane buffer; :meth:`run` is the single-query wrapper used by
+    ``TCQEngine.query(mode="wave")``.
     """
 
     def __init__(self, tel: DeviceTEL, num_vertices: int,
-                 seg_pair, seg_vert, wave: int):
+                 seg_pair, seg_vert, wave: int, depth: int = 2):
         self.tel = tel
         self.num_vertices = num_vertices
         self.seg_pair = seg_pair
         self.seg_vert = seg_vert
         self.wave = wave
+        self.depth = max(1, int(depth))
 
     def run(self, uts: np.ndarray, k: int, h: int, prune: bool,
             stats: QueryStats) -> Dict[Tuple[int, int], CoreResult]:
-        n = uts.size
+        """Single-query entry: one QueryState, same stats object for both
+        the query's and the pool's counters."""
+        qs = QueryState(uts, k, h, prune, stats)
+        self.run_pool([qs], stats)
+        return qs.decode_results(self.num_vertices)
+
+    def run_pool(self, states: List[QueryState],
+                 pool_stats: QueryStats) -> None:
+        """Drain a pool of queries through the shared lane buffer.
+
+        Cells are claimed round-robin across queries, so one device step
+        mixes lanes from many (k, h, window) queries; each query's results
+        accumulate in its own QueryState (bit-identical to running it
+        alone — packing changes lane placement, never pruning soundness,
+        because every QueryState keeps private pruning/dedup state).
+        """
         W = self.wave
-        idx_of = {int(t): i for i, t in enumerate(uts)}
-        pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
-        empty_marks: List[Tuple[int, int]] = []
-        best_init: Optional[Tuple[int, int, jnp.ndarray]] = None
-        pending = deque(range(n))
-        # tti key -> (packed uint32 row, n_edges) — decoded in bulk at the end
-        collected: Dict[Tuple[int, int], Tuple[np.ndarray, int]] = {}
-        kj, hj = jnp.int32(k), jnp.int32(h)
+        claimable = deque(s for s in states if s.n > 0)
+        occupied_total = 0
 
-        def empty_bound(r: int) -> int:
-            return max((je for ie, je in empty_marks if ie <= r), default=-1)
-
-        def advance(row: _Row) -> bool:
-            """Move cursor past pruned/empty cells; False once exhausted."""
-            j = pruned[row.i].highest_uncovered_leq(row.j)
-            if j is None or j < row.i or j <= empty_bound(row.i):
-                return False
-            row.j = j
-            return True
+        def claim() -> Optional[Tuple[QueryState, RowCursor]]:
+            while claimable:
+                s = claimable[0]
+                row = s.claim()
+                if row is not None:
+                    claimable.rotate(-1)    # round-robin fairness
+                    return s, row
+                claimable.popleft()         # drained: nothing pending
+            return None
 
         def assemble(slot: _Slot) -> None:
-            """Claim pending rows into free lanes and refill their masks."""
+            """Claim ready cells into free lanes and refill their masks."""
             for li in range(W):
-                if slot.rows[li] is not None:
+                if slot.lanes[li] is not None:
                     continue
-                row = None
-                while pending:
-                    cand = _Row(pending.popleft(), n)
-                    if advance(cand):
-                        row = cand
-                        break
-                if row is None:
+                got = claim()
+                if got is None:
                     break
-                slot.rows[li] = row
-                if (best_init is not None and best_init[0] <= row.i
-                        and best_init[1] >= row.j):
-                    slot.buf = _set_lane(slot.buf, li, best_init[2])
+                s, row = got
+                slot.lanes[li] = (s, row)
+                warm = s.warm_start(row)
+                if warm is not None:
+                    slot.buf = _set_lane(slot.buf, li, warm)
                 else:
                     slot.buf = _fill_lane(slot.buf, li, True)
                 slot.dirty.discard(li)
-                stats.lane_refills += 1
+                pool_stats.lane_refills += 1
             # lanes that died and were not re-claimed: zero once so the
             # shared fixpoint loop never spends iterations peeling them
             for li in sorted(slot.dirty):
@@ -226,98 +238,67 @@ class WavePipeline:
             slot.dirty.clear()
 
         def dispatch(slot: _Slot) -> None:
-            occupied = [li for li in range(W) if slot.rows[li] is not None]
+            occupied = [li for li in range(W)
+                        if slot.lanes[li] is not None]
             if not occupied:
                 slot.inflight = None
                 return
             ts_arr = np.zeros(W, np.int32)
-            te_arr = np.full(W, -1, np.int32)
+            te_arr = np.full(W, -1, np.int32)   # empty window for padding
+            k_arr = np.ones(W, np.int32)
+            h_arr = np.ones(W, np.int32)
             for li in occupied:
-                ts_arr[li] = int(uts[slot.rows[li].i])
-                te_arr[li] = int(uts[slot.rows[li].j])
+                s, row = slot.lanes[li]
+                ts_arr[li], te_arr[li] = s.window(row)
+                k_arr[li], h_arr[li] = s.k, s.h
+                s.stats.cells_evaluated += 1
             slot.inflight = wave_step(
                 self.tel, slot.buf, jnp.asarray(ts_arr), jnp.asarray(te_arr),
-                kj, hj, num_vertices=self.num_vertices,
+                jnp.asarray(k_arr), jnp.asarray(h_arr),
+                num_vertices=self.num_vertices,
                 seg_pair=self.seg_pair, seg_vert=self.seg_vert)
             slot.buf = slot.inflight.alive   # donated through; new handle
-            stats.device_steps += 1
-            stats.cells_evaluated += len(occupied)
+            pool_stats.device_steps += 1
+            nonlocal occupied_total
+            occupied_total += len(occupied)
 
         def retire(slot: _Slot) -> None:
-            nonlocal best_init
             res = slot.inflight
             slot.inflight = None
             packed, lo, hi, ne, it = jax.device_get(
                 (res.packed, res.tti_lo, res.tti_hi, res.n_edges, res.iters))
-            stats.host_syncs += 1
-            stats.bytes_synced += (packed.nbytes + lo.nbytes + hi.nbytes
-                                   + ne.nbytes + it.nbytes)
-            stats.peel_iters += int(it)
+            pool_stats.host_syncs += 1
+            pool_stats.bytes_synced += (packed.nbytes + lo.nbytes + hi.nbytes
+                                        + ne.nbytes + it.nbytes)
+            pool_stats.peel_iters += int(it)
             for li in range(W):
-                row = slot.rows[li]
-                if row is None:
+                lane = slot.lanes[li]
+                if lane is None:
                     continue
-                i, j = row.i, row.j
-                if int(ne[li]) == 0:
-                    empty_marks.append((i, j))   # staircase: row exhausted
-                    slot.rows[li] = None
-                    slot.dirty.add(li)
-                    continue
-                a_idx = idx_of[int(lo[li])]
-                b_idx = idx_of[int(hi[li])]
-                key = (int(lo[li]), int(hi[li]))
-                if key in collected:
-                    stats.duplicates += 1
-                else:
-                    collected[key] = (packed[li].copy(), int(ne[li]))
-                if row.first and (best_init is None or j >= best_init[1]):
-                    best_init = (i, j, res.alive[li])
-                row.first = False
-                if prune:
-                    if b_idx < j:                        # Rule 1: PoR
-                        stats.por_triggers += 1
-                        stats.pruned_por += pruned[i].add(b_idx, j - 1)
-                    if a_idx > i:                        # Rule 2: PoU
-                        stats.pou_triggers += 1
-                        for r2 in range(i + 1, a_idx + 1):
-                            stats.pruned_pou += pruned[r2].add(r2, j)
-                    if a_idx > i and b_idx < j:          # Rule 3: PoL
-                        stats.pol_triggers += 1
-                        for r2 in range(a_idx + 1, b_idx + 1):
-                            stats.pruned_pol += pruned[r2].add(b_idx + 1, j)
-                    row.j = (b_idx - 1) if b_idx < j else j - 1
-                else:
-                    row.j = j - 1
-                if not advance(row):
-                    slot.rows[li] = None
+                s, row = lane
+                keep = s.retire(row, int(lo[li]), int(hi[li]), int(ne[li]),
+                                packed[li].copy(),
+                                lambda li=li: res.alive[li])
+                if not keep:
+                    slot.lanes[li] = None
                     slot.dirty.add(li)
 
-        # prime both slots, then ping-pong: retire+reassemble+redispatch one
-        # slot while the other's step is still executing on device — the
-        # host's pruning bookkeeping overlaps device compute, and a step is
-        # always dispatched before we block on the previous step's scalars
-        slots = [_Slot(W, self.num_vertices), _Slot(W, self.num_vertices)]
+        # prime every slot, then cycle the ring: retire+reassemble+
+        # redispatch one slot while the other D-1 slots' steps execute on
+        # device — host pruning bookkeeping overlaps device compute, and
+        # D-1 steps are always in flight before we block on scalars
+        slots = [_Slot(W, self.num_vertices) for _ in range(self.depth)]
         for slot in slots:
             assemble(slot)
             dispatch(slot)
         cur = 0
-        while slots[0].inflight is not None or slots[1].inflight is not None:
+        while any(s.inflight is not None for s in slots):
             slot = slots[cur]
             if slot.inflight is not None:
                 retire(slot)
                 assemble(slot)
                 dispatch(slot)
-            cur ^= 1
+            cur = (cur + 1) % self.depth
 
-        # deferred bulk decode: one unpackbits over every collected core
-        results: Dict[Tuple[int, int], CoreResult] = {}
-        if collected:
-            keys = list(collected.keys())
-            bits = unpack_alive_u32(
-                np.stack([collected[key][0] for key in keys]),
-                self.num_vertices)
-            for key, row_bits in zip(keys, bits):
-                results[key] = CoreResult(
-                    k=k, tti=key, vertices=np.flatnonzero(row_bits),
-                    n_edges=collected[key][1])
-        return results
+        if pool_stats.device_steps:
+            pool_stats.occupancy = occupied_total / pool_stats.device_steps

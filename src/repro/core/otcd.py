@@ -1,9 +1,14 @@
 """TCD / OTCD query scheduling (paper §3–§4) over the device engines.
 
 The schedule bookkeeping (which (ts, te) cells remain, per the three pruning
-rules) is inherently sequential, tiny, and lives on host.  Every TCD
-operation (truncate + peel + TTI) is a single compiled device program with
-dynamic window/threshold scalars — one compilation serves the whole query.
+rules) is inherently sequential, tiny, and lives on host — it is factored
+into ``core/scheduler.py`` (:class:`~repro.core.scheduler.QueryState`:
+row cursors, IntervalSet pruning, empty-cell staircase, warm starts, TTI
+dedup).  Every TCD operation (truncate + peel + TTI) is a single compiled
+device program with dynamic window/threshold scalars — one compilation
+serves the whole query.  All modes peel against a *windowed* TEL
+(:meth:`TCQEngine._window_tel`, an LRU-cached power-of-two-bucketed
+truncation) so per-cell peel work scales with the query window, not |E|.
 
 Enumeration is over *unique* timestamps inside [Ts, Te] (column index space);
 cells between adjacent real timestamps are exact duplicates of their
@@ -13,22 +18,29 @@ Three execution modes share that schedule:
 
 * ``serial`` — paper-faithful: one cell per device program (`tcd.tcd`),
   decremental warm starts along each row (Theorem 1).
-* ``wave`` — the device-resident pipeline (`engine.WavePipeline`): a
+* ``wave`` — the device-resident lane pool (`engine.WavePipeline`): a
   persistent donated [W, V] lane buffer, one fused ``wave_step`` (peel +
-  TTI + stats + uint32 bitmask pack) per batch of schedule cells, packed
-  O(W·V/32) result transfer with deferred bulk decode, and two-slot
-  software pipelining so host pruning bookkeeping overlaps device compute.
-  The Pallas ``banded_segsum`` degree closures are built once per engine.
+  TTI + stats + uint32 bitmask pack) per batch of schedule cells with
+  per-lane (ts, te, k, h), packed O(W·V/32) result transfer with deferred
+  bulk decode, and a depth-D slot ring so host pruning bookkeeping
+  overlaps device compute.  The Pallas ``banded_segsum`` degree closures
+  are built once per engine.
 * ``wave_stepwise`` — the seed batched engine, retained as the benchmark
   baseline for the pipeline (one host round-trip per step, per-core [V]
   bool transfers, re-stacked lane batches).
+
+:meth:`TCQEngine.query_batch` serves *many* queries through one shared
+lane pool: cells from concurrent queries with heterogeneous (k, h,
+window) pack into the same fused steps (per-lane thresholds), keeping
+the device full while each query retires independently with results
+bit-identical to running it alone.
 """
 
 from __future__ import annotations
 
 import time
-from collections import defaultdict, deque
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict, defaultdict, deque
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -38,6 +50,7 @@ from repro.core.engine import WavePipeline
 from repro.core.graph import DeviceTEL, TemporalGraph
 from repro.core.intervals import IntervalSet
 from repro.core.results import CoreResult, QueryStats, TCQResult
+from repro.core.scheduler import EmptyStaircase, QueryState, autotune_wave
 from repro.core.wave import make_segsum_fns
 
 _I32_MAX = np.iinfo(np.int32).max
@@ -66,32 +79,36 @@ class TCQEngine:
         self._use_kernel = on_tpu() if use_kernel is None else use_kernel
         self._seg_pair, self._seg_vert = make_segsum_fns(
             graph, use_kernel=self._use_kernel)
-        self._win_cache: Dict[Tuple[int, int], Tuple[DeviceTEL, object]] = {}
+        self._win_cache: "OrderedDict[Tuple[int, int], tuple]" = OrderedDict()
 
     # -------------------------------------------------------- window slicing
     def _window_tel(self, Ts: int, Te: int):
-        """Device TEL truncated to [Ts, Te] for the wave pipeline.
+        """(tel, seg_pair, window_edges): device TEL truncated to [Ts, Te].
 
-        Every cell of a query's schedule lies inside [Ts, Te], so the wave
-        engine peels against only the window's edges — per-iteration work
-        scales with the window, not the whole graph.  Edge arrays are
-        padded to a power-of-two bucket with sentinel edges (t=-1,
-        pair_id=P, ignored by both degree paths), so compiled programs are
-        shared across windows of similar size; the vertex-side segsum
-        closure is window-independent and always reused.  On the XLA
-        degree path the pair-side closure is reused too (it only fixes
-        num_segments); the Pallas path rebuilds it because its k_max band
-        analysis depends on the windowed segment ids.
+        Every cell of a query's schedule lies inside [Ts, Te], so both the
+        serial engine and the wave pipeline peel against only the window's
+        edges — per-iteration work scales with the window, not the whole
+        graph.  Edge arrays are padded to a power-of-two bucket with
+        sentinel edges (t=int32 min, pair_id=P, ignored by both degree
+        paths), so compiled programs are shared across windows of similar
+        size; the vertex-side segsum closure is window-independent and
+        always reused.  On the XLA degree path the pair-side closure is
+        reused too (it only fixes num_segments); the Pallas path rebuilds
+        it because its k_max band analysis depends on the windowed segment
+        ids.  The cache is LRU (hits move to the back, the front is
+        evicted): serving workloads with a hot set of windows keep their
+        compiled buckets instead of churning recompiles.
         """
         key = (int(Ts), int(Te))
         hit = self._win_cache.get(key)
         if hit is not None:
+            self._win_cache.move_to_end(key)
             return hit
         g = self.graph
         idx = np.flatnonzero((g.t >= Ts) & (g.t <= Te))
         e = int(idx.size)
         if e >= g.num_edges:
-            out = (self.tel, self._seg_pair)
+            out = (self.tel, self._seg_pair, e)
         else:
             bucket = max(128, 1 << max(0, e - 1).bit_length())
             pad = bucket - e
@@ -121,15 +138,16 @@ class TCQEngine:
                 seg_pair = make_banded_segsum(pid_w, p, use_kernel=True)
             else:
                 seg_pair = self._seg_pair
-            out = (tel, seg_pair)
+            out = (tel, seg_pair, e)
         if len(self._win_cache) >= _WINDOW_CACHE_MAX:
-            self._win_cache.pop(next(iter(self._win_cache)))
+            self._win_cache.popitem(last=False)     # evict least-recent
         self._win_cache[key] = out
         return out
 
     # ------------------------------------------------------------- primitives
-    def _tcd(self, alive, ts, te, k, h):
-        return tcd_mod.tcd(self.tel, alive, ts, te, k, h,
+    def _tcd(self, alive, ts, te, k, h, tel: Optional[DeviceTEL] = None):
+        return tcd_mod.tcd(self.tel if tel is None else tel,
+                           alive, ts, te, k, h,
                            num_vertices=self.num_vertices,
                            degree_fn=self._degree_fn)
 
@@ -140,16 +158,21 @@ class TCQEngine:
 
     # ------------------------------------------------------------------ query
     def query(self, k: int, Ts: int, Te: int, *, h: int = 1,
-              algorithm: str = "otcd", mode: str = "serial", wave: int = 8,
+              algorithm: str = "otcd", mode: str = "serial",
+              wave: Union[int, str] = 8, depth: int = 2,
               min_span: Optional[int] = None,
               max_span: Optional[int] = None) -> TCQResult:
         """All distinct temporal k-cores over subintervals of [Ts, Te].
 
         algorithm: "otcd" (TTI pruning, §4) or "tcd" (full enumeration, §3).
-        mode: "serial" (paper-faithful), "wave" (device-resident pipelined
-        engine — up to ``wave`` schedule cells per fused device step, two
+        mode: "serial" (paper-faithful), "wave" (device-resident lane pool
+        — up to ``wave`` schedule cells per fused device step, ``depth``
         steps in flight), or "wave_stepwise" (the seed batched engine,
         kept as the benchmark baseline).
+        wave: lane count for wave mode, or "auto" to pick it from the
+        vertex count and the windowed edge count (scheduler.autotune_wave).
+        depth: slot-ring depth D for wave mode (pipelining; pruning seen
+        by in-flight steps is up to D-1 steps stale, still exact).
         h: link-strength lower bound (paper §6.2); 1 = plain TCQ.
         min_span/max_span: time-span constraint (paper §6.2), applied on the
         fly; pruning stays exact because it is TTI-based.
@@ -168,14 +191,30 @@ class TCQEngine:
             # honors degree_fn) rather than silently ignoring the override
             mode = "wave_stepwise"
         if mode == "wave":
-            tel_w, seg_pair_w = self._window_tel(int(uts[0]), int(uts[-1]))
+            tel_w, seg_pair_w, e_w = self._window_tel(int(uts[0]),
+                                                      int(uts[-1]))
+            stats.window_edges = e_w
+            if wave == "auto":
+                wave = autotune_wave(self.num_vertices, e_w)
             pipe = WavePipeline(tel_w, self.num_vertices,
-                                seg_pair_w, self._seg_vert, wave)
+                                seg_pair_w, self._seg_vert, wave, depth)
             cores = pipe.run(uts, k, h, prune, stats)
         elif mode == "wave_stepwise":
-            cores = self._run_wave_stepwise(uts, k, h, prune, wave, stats)
-        else:
+            stats.window_edges = self.graph.num_edges
+            cores = self._run_wave_stepwise(uts, k, h, prune,
+                                            8 if wave == "auto" else wave,
+                                            stats)
+        elif self._degree_fn is not None:
+            # custom degree fns are written against the graph's real TEL
+            # layout — never hand them the bucket-padded window truncation
+            stats.window_edges = self.graph.num_edges
             cores = self._run_serial(uts, k, h, prune, stats)
+        else:
+            # serial peels against the same windowed TEL as wave mode:
+            # per-cell work scales with the window's edges, not |E|
+            tel_w, _, e_w = self._window_tel(int(uts[0]), int(uts[-1]))
+            stats.window_edges = e_w
+            cores = self._run_serial(uts, k, h, prune, stats, tel_w)
         out = list(cores.values())
         stats.wall_time_s = time.perf_counter() - t0
         res = TCQResult(out, stats)
@@ -183,8 +222,94 @@ class TCQEngine:
             res = res.filter_span(min_span, max_span)
         return res
 
+    # ------------------------------------------------------------ query batch
+    def query_batch(self, requests: Sequence[Mapping], *,
+                    algorithm: str = "otcd", wave: Union[int, str] = "auto",
+                    depth: int = 2) -> List[TCQResult]:
+        """Serve many concurrent TCQ queries through one shared lane pool.
+
+        ``requests`` is a sequence of mappings with keys ``k``, ``ts``,
+        ``te`` and optionally ``h`` (default 1) — the format produced by
+        ``repro.data.TCQRequestStream``.  Each request gets its own
+        :class:`~repro.core.scheduler.QueryState` (private pruning, warm
+        starts, TTI dedup), while the lane pool packs ready cells from
+        every in-flight query into shared fused steps with per-lane
+        (ts, te, k, h).  One TEL truncated to the *union* window serves
+        the whole batch; per-lane windows keep each query's exact
+        semantics, so every returned ``TCQResult`` is bit-identical to
+        running that query alone.  Throughput improves because lanes
+        freed by one query's draining tail are refilled with another's
+        cells instead of idling — best when the batch's windows overlap
+        (a serving hot set): per-iteration peel cost scales with the
+        *union* window's edges, so batching a few narrow windows from
+        opposite ends of a long timeline can cost more than looping
+        ``query()`` (group such requests into separate batches).
+
+        Per-query ``QueryStats`` carry that query's schedule counters;
+        pipeline counters (device_steps, host_syncs, occupancy, ...)
+        describe the shared batch and are reported on every member (see
+        :class:`~repro.core.results.QueryStats`).
+
+        wave: lane count, or "auto" (default) — autotuned from the vertex
+        count, the union window's edge count, and the batch size.
+        depth: slot-ring depth D (D steps in flight).
+        """
+        t0 = time.perf_counter()
+        reqs = [dict(r) for r in requests]
+        prune = algorithm == "otcd"
+        if self._degree_fn is not None:
+            # custom degree semantics: fall back to per-query scheduling
+            # (the scalar TCD path honors degree_fn; the fused wave step
+            # does not)
+            return [self.query(int(r["k"]), int(r["ts"]), int(r["te"]),
+                               h=int(r.get("h", 1)), algorithm=algorithm)
+                    for r in reqs]
+        outs: List[Optional[TCQResult]] = [None] * len(reqs)
+        states: List[Tuple[int, QueryState]] = []
+        for qi, r in enumerate(reqs):
+            uts = self.graph.unique_ts
+            uts = uts[(uts >= int(r["ts"])) & (uts <= int(r["te"]))]
+            uts = uts.astype(np.int64)
+            n = int(uts.size)
+            stats = QueryStats(n_timestamps=n,
+                               cells_total=n * (n + 1) // 2,
+                               batch_size=len(reqs))
+            if n == 0:
+                outs[qi] = TCQResult([], stats)
+                continue
+            states.append((qi, QueryState(uts, int(r["k"]),
+                                          int(r.get("h", 1)), prune,
+                                          stats, qid=qi)))
+        if states:
+            lo = min(int(s.uts[0]) for _, s in states)
+            hi = max(int(s.uts[-1]) for _, s in states)
+            tel_w, seg_pair_w, e_w = self._window_tel(lo, hi)
+            if wave == "auto":
+                wave = autotune_wave(self.num_vertices, e_w,
+                                     num_queries=len(states))
+            pool_stats = QueryStats()
+            pipe = WavePipeline(tel_w, self.num_vertices, seg_pair_w,
+                                self._seg_vert, wave, depth)
+            pipe.run_pool([s for _, s in states], pool_stats)
+            for qi, s in states:
+                st = s.stats
+                st.window_edges = e_w
+                st.device_steps = pool_stats.device_steps
+                st.host_syncs = pool_stats.host_syncs
+                st.bytes_synced = pool_stats.bytes_synced
+                st.peel_iters = pool_stats.peel_iters
+                st.lane_refills = pool_stats.lane_refills
+                st.occupancy = pool_stats.occupancy
+                cores = s.decode_results(self.num_vertices)
+                outs[qi] = TCQResult(list(cores.values()), st)
+        wall = time.perf_counter() - t0
+        for out in outs:
+            out.stats.wall_time_s = wall
+        return outs
+
     # ----------------------------------------------------------- serial mode
-    def _run_serial(self, uts, k, h, prune, stats):
+    def _run_serial(self, uts, k, h, prune, stats,
+                    tel: Optional[DeviceTEL] = None):
         n = uts.size
         idx_of = {int(t): i for i, t in enumerate(uts)}
         pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
@@ -210,7 +335,7 @@ class TCQEngine:
                     warm = row_alive
                 else:
                     warm = self._ones
-                res = self._tcd(warm, int(uts[i]), int(uts[j]), k, h)
+                res = self._tcd(warm, int(uts[i]), int(uts[j]), k, h, tel)
                 stats.cells_evaluated += 1
                 stats.device_steps += 1
                 if int(res.n_edges) == 0:
@@ -263,10 +388,12 @@ class TCQEngine:
         idx_of = {int(t): i for i, t in enumerate(uts)}
         results: Dict[Tuple[int, int], CoreResult] = {}
         pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
-        # empty marks form a staircase: cell (i_e, j_e) empty => all (r>=i_e,
-        # c<=j_e) empty.  Wave mode needs the row condition explicitly (rows
-        # are concurrent, unlike the ascending serial sweep).
-        empty_marks: List[Tuple[int, int]] = []
+        # empty cells form a staircase: cell (i_e, j_e) empty => all
+        # (r>=i_e, c<=j_e) empty.  Wave mode needs the row condition
+        # explicitly (rows are concurrent, unlike the ascending serial
+        # sweep); the incremental corner list is shared with the pipeline
+        # via scheduler.EmptyStaircase.
+        empty = EmptyStaircase()
         best_init = None  # (row, col, alive) of a completed row-initial cell
 
         class Row:
@@ -278,13 +405,10 @@ class TCQEngine:
         pending = deque(range(n))
         active: List[Row] = []
 
-        def empty_bound(r: int) -> int:
-            return max((je for ie, je in empty_marks if ie <= r), default=-1)
-
         def advance(row: Row) -> bool:
             """Move cursor past pruned/empty cells; False when row exhausted."""
             j = pruned[row.i].highest_uncovered_leq(row.j)
-            if j is None or j < row.i or j <= empty_bound(row.i):
+            if j is None or j < row.i or j <= empty.bound(row.i):
                 return False
             row.j = j
             return True
@@ -330,7 +454,7 @@ class TCQEngine:
             for li, row in enumerate(lanes):
                 i, j = row.i, row.j
                 if int(n_edges[li]) == 0:
-                    empty_marks.append((i, j))
+                    empty.add(i, j)
                     continue  # row exhausted: all deeper cells empty
                 row.alive = res.alive[li]
                 a_idx = idx_of[int(tti_lo[li])]

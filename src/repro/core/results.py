@@ -36,6 +36,16 @@ class CoreResult:
 
 @dataclasses.dataclass
 class QueryStats:
+    """Per-query schedule/pipeline counters.
+
+    For queries served through ``TCQEngine.query_batch`` the pipeline is
+    shared, so the device-side counters (device_steps, host_syncs,
+    bytes_synced, peel_iters, lane_refills, occupancy, wall_time_s)
+    describe the whole batch and are reported identically on every
+    member query; schedule counters (cells_*, pruned_*, duplicates)
+    remain query-local.
+    """
+
     n_timestamps: int = 0
     cells_total: int = 0          # n*(n+1)/2 schedule cells (unique-ts space)
     cells_evaluated: int = 0      # TCD operations actually executed
@@ -53,6 +63,9 @@ class QueryStats:
     bytes_synced: int = 0         # total device->host result payload
     lane_refills: int = 0         # in-place lane buffer refills (wave mode)
     peel_iters: int = 0           # shared fixpoint iterations (wave mode)
+    window_edges: int = 0         # edges in the windowed TEL actually peeled
+    occupancy: float = 0.0        # mean occupied lanes per device step (wave)
+    batch_size: int = 0           # queries sharing the pipeline (query_batch)
     wall_time_s: float = 0.0
 
     @property

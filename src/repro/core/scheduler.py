@@ -1,0 +1,254 @@
+"""Host-side scheduling state for the multi-tenant wave pipeline.
+
+The wave engine (`engine.WavePipeline`) is a *lane pool*: a persistent
+[W, V] device buffer whose rows each peel one schedule cell per fused
+step.  Everything the pool needs to know about *which* cell a lane should
+peel next is per-query bookkeeping — row cursors, the IntervalSet pruning
+state of Rules 1–3, the empty-cell staircase, warm-start rows (Theorem 1)
+and TTI dedup (Property 2).  This module owns that bookkeeping:
+
+* :class:`QueryState` — one in-flight TCQ query.  The pipeline calls
+  ``claim()`` to draw a ready cell, ``retire()`` to feed back one
+  evaluated cell's (TTI, n_edges, packed mask), and ``decode_results()``
+  once the query drains.  Because each query keeps its own pruning and
+  dedup state, a lane pool serving many QueryStates returns *exactly*
+  the result set of running each query alone — cross-query packing only
+  changes which lanes cells ride in, never which cores exist.
+
+* :class:`EmptyStaircase` — the incremental replacement for the
+  O(|empty_marks|)-per-call ``empty_bound`` scan: empty cell (i, j)
+  implies every cell (r >= i, c <= j) is empty, so the bound
+  ``max{j : (i, j) marked, i <= r}`` is a monotone step function of r,
+  kept as a strictly-increasing corner list with O(log m) queries and
+  amortized O(log m) inserts.
+
+* :func:`autotune_wave` — picks the lane count W from the vertex count
+  and the *windowed* edge count (each lane costs O(E_w + V) active
+  elements per fixpoint iteration), scaled by how many queries the pool
+  is serving.
+"""
+
+from __future__ import annotations
+
+import bisect
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.intervals import IntervalSet
+from repro.core.results import CoreResult, QueryStats
+
+
+# ---------------------------------------------------------- empty staircase
+class EmptyStaircase:
+    """Monotone bound ``max{j : mark (i, j), i <= r}`` over empty cells.
+
+    Marks arrive in arbitrary order (wave lanes retire concurrently, rows
+    are not swept in ascending order), but the bound itself is
+    non-decreasing in r, so only the *dominant* corners need keeping:
+    ``_is`` strictly increasing, ``_js`` strictly increasing, and a mark
+    (i, j) is dominated iff some kept (i', j') has i' <= i and j' >= j.
+    """
+
+    __slots__ = ("_is", "_js")
+
+    def __init__(self):
+        self._is: List[int] = []
+        self._js: List[int] = []
+
+    def add(self, i: int, j: int) -> None:
+        """Record empty cell (i, j); drops it if dominated, else replaces
+        every corner it dominates (amortized O(log m))."""
+        pos = bisect.bisect_right(self._is, i)
+        if pos and self._js[pos - 1] >= j:
+            return
+        start = pos - 1 if pos and self._is[pos - 1] == i else pos
+        end = pos
+        while end < len(self._js) and self._js[end] <= j:
+            end += 1
+        self._is[start:end] = [i]
+        self._js[start:end] = [j]
+
+    def bound(self, r: int) -> int:
+        """Largest marked j with i <= r, or -1: cells (r, c <= bound) are
+        provably empty."""
+        pos = bisect.bisect_right(self._is, r)
+        return self._js[pos - 1] if pos else -1
+
+    def __len__(self) -> int:
+        return len(self._is)
+
+
+# --------------------------------------------------------------- row cursor
+class RowCursor:
+    """Cursor of one schedule row: cells (i, j) swept right-to-left."""
+
+    __slots__ = ("i", "j", "first")
+
+    def __init__(self, i: int, n: int):
+        self.i, self.j, self.first = i, n - 1, True
+
+
+# -------------------------------------------------------------- query state
+class QueryState:
+    """Schedule bookkeeping for one TCQ query served by the lane pool.
+
+    Owns the per-query pruning state (IntervalSets of Rules 1–3, the
+    empty-cell staircase), warm-start tracking (best completed row-initial
+    core, Theorem 1), TTI dedup (Property 2) and the packed result rows.
+    ``stats`` accumulates this query's own counters (cells evaluated,
+    prune triggers, duplicates); pipeline-level counters (device steps,
+    syncs) belong to whoever runs the pool.
+    """
+
+    def __init__(self, uts: np.ndarray, k: int, h: int, prune: bool,
+                 stats: QueryStats, qid: int = 0):
+        self.qid = qid
+        self.uts = np.asarray(uts)
+        self.n = int(self.uts.size)
+        self.k, self.h = int(k), int(h)
+        self.prune = bool(prune)
+        self.stats = stats
+        self.idx_of = {int(t): i for i, t in enumerate(self.uts)}
+        self.pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
+        self.empty = EmptyStaircase()
+        # (row, col, device [V] row) of the best completed row-initial core
+        self.best_init: Optional[Tuple[int, int, object]] = None
+        self.pending = deque(range(self.n))
+        self.live_rows = 0          # rows currently holding a lane
+        # tti key -> (packed uint32 row, n_edges); decoded in bulk at the end
+        self.collected: Dict[Tuple[int, int], Tuple[np.ndarray, int]] = {}
+
+    # ------------------------------------------------------------- claiming
+    @property
+    def drained(self) -> bool:
+        """No more rows to hand out (in-flight rows may still be peeling)."""
+        return not self.pending
+
+    @property
+    def done(self) -> bool:
+        return not self.pending and self.live_rows == 0
+
+    def claim(self) -> Optional[RowCursor]:
+        """Next ready row cursor, or None when nothing is pending."""
+        while self.pending:
+            row = RowCursor(self.pending.popleft(), self.n)
+            if self._advance(row):
+                self.live_rows += 1
+                return row
+        return None
+
+    def _advance(self, row: RowCursor) -> bool:
+        """Move the cursor past pruned/empty cells; False once exhausted."""
+        j = self.pruned[row.i].highest_uncovered_leq(row.j)
+        if j is None or j < row.i or j <= self.empty.bound(row.i):
+            return False
+        row.j = j
+        return True
+
+    def window(self, row: RowCursor) -> Tuple[int, int]:
+        return int(self.uts[row.i]), int(self.uts[row.j])
+
+    def warm_start(self, row: RowCursor):
+        """Device [V] row to warm the lane with, or None for cold all-ones.
+
+        Theorem 1: any completed core over an enclosing window is a valid
+        peel superset, so the widest finished row-initial core warms every
+        cell it sandwiches."""
+        b = self.best_init
+        if b is not None and b[0] <= row.i and b[1] >= row.j:
+            return b[2]
+        return None
+
+    # ------------------------------------------------------------- retiring
+    def retire(self, row: RowCursor, tti_lo: int, tti_hi: int, n_edges: int,
+               packed_row: np.ndarray, alive_row: Callable[[], object]
+               ) -> bool:
+        """Feed back one evaluated cell; True iff the row keeps its lane
+        (its peeled mask is then the warm start for the next cell).
+
+        ``alive_row`` is a thunk producing the lane's device [V] row — it
+        is only materialized when the cell becomes the new best warm-start
+        row, so retiring never copies lanes it does not need.
+        """
+        i, j = row.i, row.j
+        stats = self.stats
+        if n_edges == 0:
+            self.empty.add(i, j)        # staircase: row exhausted
+            self.live_rows -= 1
+            return False
+        a_idx = self.idx_of[tti_lo]
+        b_idx = self.idx_of[tti_hi]
+        key = (tti_lo, tti_hi)
+        if key in self.collected:
+            stats.duplicates += 1
+        else:
+            self.collected[key] = (packed_row, n_edges)
+        if row.first and (self.best_init is None or j >= self.best_init[1]):
+            self.best_init = (i, j, alive_row())
+        row.first = False
+        if self.prune:
+            if b_idx < j:                        # Rule 1: PoR
+                stats.por_triggers += 1
+                stats.pruned_por += self.pruned[i].add(b_idx, j - 1)
+            if a_idx > i:                        # Rule 2: PoU
+                stats.pou_triggers += 1
+                for r2 in range(i + 1, a_idx + 1):
+                    stats.pruned_pou += self.pruned[r2].add(r2, j)
+            if a_idx > i and b_idx < j:          # Rule 3: PoL
+                stats.pol_triggers += 1
+                for r2 in range(a_idx + 1, b_idx + 1):
+                    stats.pruned_pol += self.pruned[r2].add(b_idx + 1, j)
+            row.j = (b_idx - 1) if b_idx < j else j - 1
+        else:
+            row.j = j - 1
+        if self._advance(row):
+            return True
+        self.live_rows -= 1
+        return False
+
+    # -------------------------------------------------------------- results
+    def decode_results(self, num_vertices: int
+                       ) -> Dict[Tuple[int, int], CoreResult]:
+        """One deferred bulk unpack of every collected packed core row."""
+        from repro.core.engine import unpack_alive_u32
+
+        results: Dict[Tuple[int, int], CoreResult] = {}
+        if self.collected:
+            keys = list(self.collected.keys())
+            bits = unpack_alive_u32(
+                np.stack([self.collected[key][0] for key in keys]),
+                num_vertices)
+            for key, row_bits in zip(keys, bits):
+                results[key] = CoreResult(
+                    k=self.k, tti=key, vertices=np.flatnonzero(row_bits),
+                    n_edges=self.collected[key][1])
+        return results
+
+
+# ----------------------------------------------------------- lane autotuning
+_LANE_ELEM_BUDGET = 1 << 19     # active elements (~f32 words) per device step
+_LANES_PER_QUERY = 8            # demand: lanes one query can keep busy
+_W_MIN, _W_MAX = 4, 64
+
+
+def autotune_wave(num_vertices: int, window_edges: int,
+                  num_queries: int = 1) -> int:
+    """Pick the lane count W for a (batch of) wave queries.
+
+    One fixpoint iteration touches O(W * (E_w + V)) active elements (edge
+    activity + degrees per lane), so W is sized to keep a step's working
+    set near ``_LANE_ELEM_BUDGET`` — large enough to amortize per-step
+    dispatch/sync overhead, small enough to stay cache/VMEM-resident and
+    to bound the waste of the shared fixpoint loop (every lane runs until
+    the slowest converges).  Demand caps supply: a single query rarely
+    keeps more than ~8 lanes full (schedule tails drain), so W also scales
+    with how many queries the pool serves.  Result is a power of two in
+    [4, 64] so lane-buffer shapes (and compiled programs) are reused.
+    """
+    per_lane = max(1, int(num_vertices) + int(window_edges))
+    supply = max(1, _LANE_ELEM_BUDGET // per_lane)
+    demand = _LANES_PER_QUERY * max(1, int(num_queries))
+    w = max(_W_MIN, min(_W_MAX, supply, demand))
+    return 1 << (w.bit_length() - 1)            # round down to a power of two

@@ -66,9 +66,10 @@ def wave_edge_activity(tel: DeviceTEL, alive: jnp.ndarray, ts, te
 def wave_degrees_from_ea(tel: DeviceTEL, ea: jnp.ndarray, h,
                          *, num_vertices: int, seg_pair: Callable,
                          seg_vert: Callable) -> jnp.ndarray:
-    """ea: [Q, E] edge activity.  Returns [Q, V] int32 degrees."""
+    """ea: [Q, E] edge activity; h: scalar or per-lane [Q].
+    Returns [Q, V] int32 degrees."""
     paircnt = seg_pair(ea.T.astype(jnp.float32), tel.pair_id)  # [P, Q]
-    pairact = (paircnt >= h).astype(jnp.float32)
+    pairact = (paircnt >= h).astype(jnp.float32)   # h broadcasts over lanes
     contrib = pairact[tel.hp_pair, :]                          # [2P, Q]
     deg = seg_vert(contrib, tel.hp_src)                        # [V, Q]
     return deg.T.astype(jnp.int32)
@@ -89,10 +90,19 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
     """Shared batched peel loop -> (alive, ea, iters); trace-time building
     block for `tcd_wave` and engine.wave_step.
 
+    k and h may be scalars (one threshold for the whole wave) or per-lane
+    [Q] vectors — the multi-tenant scheduler packs cells from queries with
+    different (k, h) into one wave, so the survivor test broadcasts the
+    thresholds per lane.
+
     ea rides in the carry (as in tcd.tcd): the final iteration observed
     new == cur, so the carried ea is exactly the fixpoint's edge activity
     and callers skip the post-loop edge pass.
     """
+    q = alive.shape[0]
+    k_lane = jnp.broadcast_to(jnp.asarray(k, jnp.int32), (q,))
+    h_lane = jnp.broadcast_to(jnp.asarray(h, jnp.int32), (q,))
+
     def cond(state):
         _, _, changed, it = state
         more = changed
@@ -103,9 +113,10 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
     def body(state):
         cur, _, _, it = state
         ea = wave_edge_activity(tel, cur, ts, te)
-        deg = wave_degrees_from_ea(tel, ea, h, num_vertices=num_vertices,
+        deg = wave_degrees_from_ea(tel, ea, h_lane,
+                                   num_vertices=num_vertices,
                                    seg_pair=seg_pair, seg_vert=seg_vert)
-        new = cur & (deg >= k)
+        new = cur & (deg >= k_lane[:, None])
         return new, ea, jnp.any(new != cur), it + 1
 
     ea0 = jnp.zeros((alive.shape[0], tel.t.shape[0]), dtype=bool)
@@ -121,7 +132,8 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
 def tcd_wave(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
              *, num_vertices: int, seg_pair, seg_vert,
              max_iters: int = 0) -> WaveResult:
-    """Batched TCD to the fixpoint.  alive: [Q, V] warm-start supersets."""
+    """Batched TCD to the fixpoint.  alive: [Q, V] warm-start supersets;
+    k/h: scalars or per-lane [Q] vectors (mixed-threshold waves)."""
     alive, ea, iters = peel_to_fixpoint(
         tel, alive, ts, te, k, h, num_vertices=num_vertices,
         seg_pair=seg_pair, seg_vert=seg_vert, max_iters=max_iters)

@@ -1,0 +1,198 @@
+"""Multi-tenant scheduler: QueryState pool, mixed-(k, h) batches, the
+incremental empty-cell staircase, lane autotuning, and the LRU window
+cache.
+
+The load-bearing property: ``query_batch`` over heterogeneous
+k/h/window requests — including empty-result and single-timestamp
+windows — returns results *identical* (TTI keys, vertex sets, n_edges)
+to per-query ``mode="serial"`` runs, at any slot-ring depth.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import TCQEngine, TemporalGraph
+from repro.core.scheduler import EmptyStaircase, QueryState, autotune_wave
+
+
+def random_graph(seed: int, n_v: int = 20, n_e: int = 120, max_t: int = 16):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n_v, n_e)
+    v = rng.integers(0, n_v, n_e)
+    t = rng.integers(1, max_t + 1, n_e)
+    return TemporalGraph.from_edges(u, v, t, num_vertices=n_v)
+
+
+def assert_same(got, want, ctx=""):
+    assert got.by_tti().keys() == want.by_tti().keys(), ctx
+    for key, cw in want.by_tti().items():
+        cg = got.by_tti()[key]
+        assert np.array_equal(cg.vertices, cw.vertices), (ctx, key)
+        assert cg.n_edges == cw.n_edges, (ctx, key)
+        assert cg.k == cw.k, (ctx, key)
+
+
+# ------------------------------------------------------------ batch = serial
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_query_batch_mixed_kh_equals_serial(seed):
+    g = random_graph(seed, n_v=22, n_e=160, max_t=18)
+    Ts, Te = g.span
+    mid = (Ts + Te) // 2
+    ut0 = int(g.unique_ts[0])
+    reqs = [
+        {"k": 2, "ts": Ts, "te": Te},                   # full window
+        {"k": 3, "ts": Ts, "te": mid},                  # half window
+        {"k": 2, "ts": mid, "te": Te, "h": 2},          # link-strength
+        {"k": 4, "ts": Ts + 1, "te": Te - 1},           # higher k
+        {"k": 1, "ts": mid - 2, "te": mid + 2},         # tiny window
+        {"k": 30, "ts": Ts, "te": Te},                  # empty result
+        {"k": 2, "ts": ut0, "te": ut0},                 # single timestamp
+        {"k": 2, "ts": Te + 10, "te": Te + 20},         # empty schedule
+    ]
+    eng = TCQEngine(g)
+    outs = eng.query_batch(reqs)
+    assert len(outs) == len(reqs)
+    for r, out in zip(reqs, outs):
+        want = eng.query(r["k"], r["ts"], r["te"], h=r.get("h", 1))
+        assert_same(out, want, ctx=str(r))
+        assert out.stats.batch_size == len(reqs)
+
+
+@pytest.mark.parametrize("depth,wave", [(1, 4), (3, 8), (4, "auto")])
+def test_query_batch_depth_ring(depth, wave):
+    g = random_graph(7, n_v=18, n_e=130, max_t=12)
+    Ts, Te = g.span
+    reqs = [{"k": 2, "ts": Ts, "te": Te},
+            {"k": 3, "ts": Ts, "te": (Ts + Te) // 2},
+            {"k": 2, "ts": (Ts + Te) // 2, "te": Te, "h": 2}]
+    eng = TCQEngine(g)
+    outs = eng.query_batch(reqs, wave=wave, depth=depth)
+    for r, out in zip(reqs, outs):
+        want = eng.query(r["k"], r["ts"], r["te"], h=r.get("h", 1))
+        assert_same(out, want, ctx=f"depth={depth} {r}")
+
+
+def test_query_batch_occupancy_and_shared_stats():
+    g = random_graph(9, n_v=24, n_e=200, max_t=20)
+    Ts, Te = g.span
+    reqs = [{"k": 2, "ts": Ts, "te": Te} for _ in range(4)]
+    outs = TCQEngine(g).query_batch(reqs, wave=8)
+    s0 = outs[0].stats
+    assert s0.device_steps > 0
+    assert 0.0 < s0.occupancy <= 8.0
+    # pipeline counters are batch-wide: identical on every member query
+    for out in outs[1:]:
+        assert out.stats.device_steps == s0.device_steps
+        assert out.stats.occupancy == s0.occupancy
+    # identical queries still retire with identical (deduped) results
+    for out in outs[1:]:
+        assert_same(out, outs[0])
+
+
+def test_single_query_wave_depths_equal():
+    g = random_graph(4, n_v=20, n_e=150, max_t=16)
+    Ts, Te = g.span
+    eng = TCQEngine(g)
+    want = eng.query(2, Ts, Te)
+    for depth in (1, 2, 4):
+        got = eng.query(2, Ts, Te, mode="wave", wave=5, depth=depth)
+        assert_same(got, want, ctx=f"depth={depth}")
+
+
+# --------------------------------------------------------- serial windowing
+def test_serial_mode_uses_windowed_tel():
+    g = random_graph(13, n_v=20, n_e=200, max_t=24)
+    Ts, Te = g.span
+    lo, hi = Ts + (Te - Ts) // 4, Ts + (3 * (Te - Ts)) // 4
+    eng = TCQEngine(g)
+    res = eng.query(2, lo, hi)
+    # the stat reports the truncated edge count, strictly below |E|
+    n_in_window, _ = g.window_counts(lo, hi)
+    assert res.stats.window_edges == n_in_window < g.num_edges
+    assert eng._win_cache       # truncation was built and cached
+    # and the truncated peel returns exactly the full-TEL wave results
+    assert_same(eng.query(2, lo, hi, mode="wave_stepwise"), res)
+
+
+# ------------------------------------------------------------- LRU window
+def test_window_cache_is_lru(monkeypatch):
+    from repro.core import otcd
+
+    g = random_graph(17, n_v=16, n_e=140, max_t=30)
+    Ts, Te = g.span
+    eng = TCQEngine(g)
+    monkeypatch.setattr(otcd, "_WINDOW_CACHE_MAX", 2)
+    eng.query(2, Ts, Te - 10)           # A
+    eng.query(2, Ts, Te - 12)           # B
+    key_a = (Ts, Te - 10)
+    assert key_a in eng._win_cache
+    eng.query(2, Ts, Te - 10)           # touch A -> back of the queue
+    eng.query(2, Ts, Te - 14)           # C evicts B (least recent), not A
+    assert key_a in eng._win_cache
+    assert (Ts, Te - 12) not in eng._win_cache
+    assert (Ts, Te - 14) in eng._win_cache
+
+
+# ----------------------------------------------------------- EmptyStaircase
+def test_empty_staircase_matches_naive_scan():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        marks = []
+        stair = EmptyStaircase()
+        for _ in range(rng.integers(1, 40)):
+            i = int(rng.integers(0, 30))
+            j = int(rng.integers(0, 30))
+            marks.append((i, j))
+            stair.add(i, j)
+            for r in range(-1, 31):
+                naive = max((je for ie, je in marks if ie <= r), default=-1)
+                assert stair.bound(r) == naive, (marks, r)
+
+
+def test_empty_staircase_dominance_keeps_corner_list_small():
+    stair = EmptyStaircase()
+    stair.add(5, 10)
+    stair.add(7, 3)         # dominated: bound unchanged everywhere
+    assert len(stair) == 1
+    stair.add(5, 12)        # replaces same-row mark
+    assert len(stair) == 1 and stair.bound(5) == 12
+    stair.add(2, 20)        # dominates (5, 12)
+    assert len(stair) == 1 and stair.bound(30) == 20
+    stair.add(10, 25)       # genuine new corner
+    assert len(stair) == 2
+    assert stair.bound(9) == 20 and stair.bound(10) == 25
+    assert stair.bound(1) == -1
+
+
+# -------------------------------------------------------------- autotuning
+def test_autotune_wave_properties():
+    for v, e, q in [(10, 100, 1), (1_800, 4_096, 1), (1_800, 4_096, 8),
+                    (100_000, 1 << 20, 4), (5, 0, 100)]:
+        w = autotune_wave(v, e, num_queries=q)
+        assert 4 <= w <= 64
+        assert w & (w - 1) == 0, "lane count must be a power of two"
+    # more concurrent queries never shrink the pool
+    assert (autotune_wave(1_800, 4_096, num_queries=8)
+            >= autotune_wave(1_800, 4_096, num_queries=1))
+    # huge per-lane footprints clamp the pool down
+    assert autotune_wave(10_000_000, 1 << 24) == 4
+
+
+# --------------------------------------------------- QueryState bookkeeping
+def test_query_state_claim_and_drain():
+    from repro.core.results import QueryStats
+
+    uts = np.arange(5)
+    qs = QueryState(uts, k=2, h=1, prune=True, stats=QueryStats())
+    rows = []
+    while True:
+        row = qs.claim()
+        if row is None:
+            break
+        rows.append(row)
+    assert [r.i for r in rows] == [0, 1, 2, 3, 4]
+    assert all(r.j == 4 for r in rows)
+    assert qs.drained and not qs.done and qs.live_rows == 5
+    # an empty cell retires the row and feeds the staircase
+    kept = qs.retire(rows[0], 0, 0, 0, None, lambda: None)
+    assert not kept and qs.empty.bound(0) == 4
