@@ -1,22 +1,26 @@
-"""Stepwise (seed) vs device-resident pipelined wave engine.
+"""Serial engine vs device-resident pipelined wave engine.
 
-Measures the tentpole claims head to head on the same engine, same
-schedule, same wave width:
+Measures the wave pipeline's claims against the paper-faithful serial
+engine on the same schedule, same windowed TEL:
 
-  * wall time — the pipelined engine overlaps host pruning bookkeeping
-    with device compute and never re-stacks lane buffers;
-  * host sync counts — one blocking device_get per step vs 3 + one per
-    discovered core;
+  * wall time — the pipelined engine packs up to W schedule cells into
+    one fused device step and overlaps host pruning bookkeeping with
+    device compute (depth-D slot ring);
+  * host sync counts — one blocking device_get per step vs one per
+    evaluated cell plus one per discovered core;
   * device->host bytes per step — packed uint32 bitmasks (O(W*V/32)
-    words) vs per-core [V] bool masks (O(W*V) bytes worst case).
+    words) vs per-core [V] bool masks.
+
+(The seed stepwise engine that used to anchor this bench was retired
+after PR 2 — its numbers live on in the BENCH_wave.json history.)
 
 The reference workload is a fixed window of the CPU-scaled collegemsg
 analogue (deterministic — no query search loop), chosen to be
 dispatch/transfer-bound like the paper's result-proportional regime.
 Both modes' result sets are compared core-by-core and the run raises on
 any divergence, so ``python -m benchmarks.run`` exits non-zero if the
-pipelined engine ever drifts from the seed baseline — the bench doubles
-as a regression gate.  Emits rows for
+pipelined engine ever drifts from the serial reference — the bench
+doubles as a regression gate.  Emits rows for
 benchmarks/results/bench_pipeline.json; run.py folds the same rows into
 the repo-root BENCH_wave.json trajectory file.
 """
@@ -43,8 +47,9 @@ def run(name: str = "collegemsg", wave: int = 8, repeat: int = 3):
     rows = []
     by_mode = {}
     results = {}
-    for mode in ("wave_stepwise", "wave"):
-        fn = lambda: eng.query(k, ts, te, mode=mode, wave=wave)  # noqa: E731
+    for mode in ("serial", "wave"):
+        kw = {} if mode == "serial" else {"mode": "wave", "wave": wave}
+        fn = lambda: eng.query(k, ts, te, **kw)  # noqa: E731
         res = fn()                       # warm the compile caches
         results[mode] = res
         t = timeit(fn, repeat=repeat)
@@ -61,19 +66,19 @@ def run(name: str = "collegemsg", wave: int = 8, repeat: int = 3):
         }
         rows.append(row)
         by_mode[mode] = row
-    # regression gate: the pipelined engine must return exactly the seed
-    # stepwise engine's result set on the reference workload — a raise
+    # regression gate: the pipelined engine must return exactly the
+    # serial engine's result set on the reference workload — a raise
     # here makes `python -m benchmarks.run` exit non-zero
-    assert_cores_equal(results["wave"], results["wave_stepwise"],
-                       ctx=f"wave vs wave_stepwise on {name}")
-    sw, pl = by_mode["wave_stepwise"], by_mode["wave"]
+    assert_cores_equal(results["wave"], results["serial"],
+                       ctx=f"wave vs serial on {name}")
+    se, pl = by_mode["serial"], by_mode["wave"]
     rows.append({
         "bench": "pipeline_summary", "graph": name, "wave": wave,
         "equivalent": True,     # the gate above raised otherwise
-        "speedup_pipelined_vs_stepwise": sw["t_s"] / pl["t_s"],
-        "sync_reduction": sw["host_syncs"] / max(1, pl["host_syncs"]),
+        "speedup_wave_vs_serial": se["t_s"] / pl["t_s"],
+        "sync_reduction": se["host_syncs"] / max(1, pl["host_syncs"]),
         "bytes_per_step_reduction":
-            sw["bytes_per_step"] / max(1e-9, pl["bytes_per_step"]),
+            se["bytes_per_step"] / max(1e-9, pl["bytes_per_step"]),
     })
     emit("bench_pipeline", rows)
     return rows

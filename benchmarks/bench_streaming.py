@@ -1,0 +1,188 @@
+"""Streaming service runtime: clustered pools vs one union-window pool,
+and sustained throughput under concurrent edge ingestion.
+
+Two measurements, both doubling as regression gates (any divergence
+raises, so ``python -m benchmarks.run`` exits non-zero):
+
+1. **Window-clustered batching** — a request set whose windows form
+   disjoint far-apart groups is the worst case for
+   ``TCQEngine.query_batch``'s single union-window TEL: every fused
+   peel iteration pays for the union's edges while each lane only needs
+   its own cluster's.  ``TCQService`` groups the same requests by window
+   overlap and runs one tight pool per cluster.  Results must be
+   identical request-for-request; the summary row records the speedup.
+
+2. **Sustained qps with concurrent ingestion** — requests are injected
+   through the service's poll hook (arrivals land mid-flight) while
+   edge batches are pushed between waves, each push a new TEL epoch.
+   Every ticket is checked bit-identical to an isolated query on its
+   *pinned snapshot* — the snapshot-consistency gate: no query may
+   observe edges pushed after its admission.
+
+Rows feed benchmarks/results/bench_streaming.json and the
+BENCH_wave.json ``streaming`` trajectory.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (GRAPH_K, assert_cores_equal, emit, engine,
+                               graph, timeit)
+
+N_GROUPS = 3        # disjoint window clusters spread over the timeline
+PER_GROUP = 3       # nested requests within each cluster
+SPAN_UTS = 36       # unique timestamps per cluster's widest window
+NEST_UTS = 4        # shrink per zoom-in request inside a cluster
+GROUP_FRACS = (0.06, 0.48, 0.88)    # cluster starts (fraction of timeline)
+
+
+def disjoint_requests(name: str):
+    """N_GROUPS x PER_GROUP mixed-k requests: each group is a nested
+    zoom-in staircase (a natural drill-down pattern, and later members
+    fit a live pool built from the widest), groups sit far apart on the
+    timeline — the anti-union workload."""
+    uts = graph(name).unique_ts
+    k0 = GRAPH_K[name]
+    n = int(uts.size)
+    reqs = []
+    for gi, frac in enumerate(GROUP_FRACS[:N_GROUPS]):
+        s0 = min(int(frac * n), max(0, n - SPAN_UTS - 2))
+        for i in range(PER_GROUP):
+            i0 = min(s0 + i * NEST_UTS, n - 2)
+            j0 = max(i0 + 1, min(s0 + SPAN_UTS - i * NEST_UTS, n - 1))
+            reqs.append({"k": k0 + (i % 2), "ts": int(uts[i0]),
+                         "te": int(uts[j0])})
+    return reqs
+
+
+def _serve_clustered(eng, reqs):
+    from repro.core import TCQService
+
+    svc = TCQService(graph=None, engine=eng)
+    tickets = [svc.submit(r) for r in reqs]
+    svc.run_until_idle()
+    return svc, tickets
+
+
+def run_clustered_vs_union(name: str, repeat: int):
+    eng = engine(name)
+    reqs = disjoint_requests(name)
+
+    union = lambda: eng.query_batch(reqs)  # noqa: E731
+    clustered = lambda: _serve_clustered(eng, reqs)  # noqa: E731
+
+    union_res = union()                    # warm compile caches + gate refs
+    svc, tickets = clustered()
+    # snapshot-consistency gate: clustered pools must return exactly the
+    # union pool's per-request results (both bit-identical to isolation)
+    for r, tk, want in zip(reqs, tickets, union_res):
+        assert_cores_equal(tk.result, want,
+                           ctx=f"clustered vs union on {name} {r}")
+
+    t_union = timeit(union, repeat=repeat)
+    t_clustered = timeit(clustered, repeat=repeat)
+    union_stats = next(r.stats for r in union_res if r.stats.device_steps)
+    pool_edges = [p["window_edges"] for p in svc.pool_log]
+    rows = [
+        {"bench": "streaming", "graph": name, "mode": "union_pool",
+         "n_queries": len(reqs), "t_s": t_union,
+         "qps": len(reqs) / t_union,
+         "window_edges": union_stats.window_edges,
+         "device_steps": union_stats.device_steps,
+         "occupancy": union_stats.occupancy},
+        {"bench": "streaming", "graph": name, "mode": "clustered",
+         "n_queries": len(reqs), "t_s": t_clustered,
+         "qps": len(reqs) / t_clustered,
+         "pools": len(svc.pool_log),
+         "window_edges_per_pool": pool_edges,
+         "occupancy": float(np.mean(
+             [p["occupancy"] for p in svc.pool_log]))},
+        {"bench": "streaming_summary", "graph": name,
+         "n_queries": len(reqs), "n_clusters": len(svc.pool_log),
+         "speedup_clustered_vs_union": t_union / t_clustered,
+         "union_window_edges": union_stats.window_edges,
+         "max_cluster_window_edges": max(pool_edges),
+         "equivalent": True},     # the gate above raised otherwise
+    ]
+    return rows
+
+
+def run_ingest(name: str, n_requests: int = 12, ingest_every: int = 4,
+               burst: int = 2):
+    """Sustained service: bursty arrivals injected mid-flight via poll,
+    edge batches pushed between waves (new epoch each), snapshot gate
+    on.  Within a burst the widest window arrives first, so later
+    members of the same cluster can join its live pool mid-flight."""
+    from repro.core import TCQEngine, TCQService
+    from repro.graphs import EdgeStream, powerlaw_temporal
+
+    g0 = graph(name)
+    lo, hi = g0.span
+    base_reqs = disjoint_requests(name)     # widest window leads each group
+    queue = [dict(base_reqs[i % len(base_reqs)]) for i in range(n_requests)]
+    future = powerlaw_temporal(g0.num_vertices, max(g0.num_edges // 10, 64),
+                               (hi - lo) // 4 + 1, seed=91)
+    batches = [(u, v, t + hi) for u, v, t in
+               EdgeStream.replay(future, max(2, n_requests // ingest_every))]
+
+    svc = TCQService(g0)        # fresh engine: ingestion must not poison
+    state = {"submitted": 0}    # the shared bench engine cache
+
+    def poll(s):
+        if state["submitted"] < len(queue):
+            for _ in range(burst):
+                if state["submitted"] >= len(queue):
+                    break
+                s.submit(queue[state["submitted"]])
+                state["submitted"] += 1
+            if state["submitted"] % ingest_every == 0 and batches:
+                u, v, t = batches.pop(0)
+                s.push_edges(u, v, t)
+
+    # warm the compile caches on one throwaway query
+    svc.submit(queue[0]); svc.run_until_idle()
+    served0 = list(svc.completed); svc.completed.clear(); svc.pool_log.clear()
+    del served0
+
+    import time
+    t0 = time.perf_counter()
+    served = svc.run_until_idle(poll)
+    wall = time.perf_counter() - t0
+    assert len(served) == n_requests, (len(served), n_requests)
+
+    # snapshot-consistency gate: every ticket == isolated query on its
+    # pinned epoch snapshot (no query observes post-admission edges)
+    engines = {}
+    for tk in served:
+        if tk.epoch not in engines:
+            engines[tk.epoch] = TCQEngine(tk.graph)
+        want = engines[tk.epoch].query(tk.k, tk.ts, tk.te, h=tk.h)
+        assert_cores_equal(tk.result, want,
+                           ctx=f"snapshot consistency {name} ticket {tk.id} "
+                               f"epoch {tk.epoch}")
+
+    lat = np.array([tk.latency_s for tk in served])
+    return [{
+        "bench": "streaming_ingest", "graph": name,
+        "n_queries": n_requests, "t_s": wall, "qps": n_requests / wall,
+        "epochs_ingested": svc.epoch,
+        "pools": len(svc.pool_log),
+        "admitted_midflight": sum(p["admitted_midflight"]
+                                  for p in svc.pool_log),
+        "p50_ms": 1e3 * float(np.quantile(lat, .5)),
+        "p95_ms": 1e3 * float(np.quantile(lat, .95)),
+        "snapshot_consistent": True,    # the gate above raised otherwise
+    }]
+
+
+def run(name: str = "collegemsg", repeat: int = 2):
+    rows = run_clustered_vs_union(name, repeat)
+    rows += run_ingest(name)
+    emit("bench_streaming", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -15,15 +15,22 @@ from repro.graphs import powerlaw_temporal
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
+# REPRO_BENCH_SMOKE=1 shrinks every graph so the cross-engine divergence
+# gates (bench_pipeline / bench_service / bench_streaming) run in CI
+# minutes; smoke numbers are never folded into BENCH_wave.json (run.py
+# skips the trajectory write).
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+_S = 8 if SMOKE else 1
+
 # CPU-scaled analogues of the paper's Table 2 graphs (same shape family:
 # skewed degrees + bursty timestamps; |V|,|E| scaled to interactive CPU runs)
 GRAPHS = {
-    "collegemsg": dict(num_vertices=1_800, num_edges=20_000,
-                       time_span=16_384, burst_periods=10, seed=42),
-    "email": dict(num_vertices=900, num_edges=12_000,
-                  time_span=8_192, burst_periods=8, seed=7),
-    "mathoverflow": dict(num_vertices=8_000, num_edges=60_000,
-                         time_span=32_768, burst_periods=14, seed=11),
+    "collegemsg": dict(num_vertices=1_800 // _S, num_edges=20_000 // _S,
+                       time_span=16_384 // _S, burst_periods=10, seed=42),
+    "email": dict(num_vertices=900 // _S, num_edges=12_000 // _S,
+                  time_span=8_192 // _S, burst_periods=8, seed=7),
+    "mathoverflow": dict(num_vertices=8_000 // _S, num_edges=60_000 // _S,
+                         time_span=32_768 // _S, burst_periods=14, seed=11),
 }
 GRAPH_K = {"collegemsg": 2, "email": 3, "mathoverflow": 2}
 

@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 full JSON records under benchmarks/results/.  The wave-engine rows
-(bench_wave + bench_pipeline + bench_service) are additionally folded
-into the repo-root ``BENCH_wave.json`` so the wave-mode perf trajectory
-is tracked across PRs; bench_pipeline and bench_service also verify
-cross-engine result equivalence and raise (non-zero exit) on divergence,
-so the harness doubles as a regression gate.  The dry-run / roofline tables are produced by
+(bench_wave + bench_pipeline + bench_service + bench_streaming) are
+additionally folded into the repo-root ``BENCH_wave.json`` so the
+wave-mode perf trajectory is tracked across PRs; bench_pipeline,
+bench_service and bench_streaming also verify cross-engine result
+equivalence (including the streaming snapshot-consistency gate) and
+raise (non-zero exit) on divergence, so the harness doubles as a
+regression gate.  With ``REPRO_BENCH_SMOKE=1`` only the gate benches run,
+on shrunken graphs, and the trajectory file is left untouched — that is
+the per-PR CI mode.  The dry-run / roofline tables are produced by
 ``python -m repro.launch.dryrun`` and ``python -m benchmarks.roofline``
 (they need the 512-device env and are kept out of this CPU-timing
 harness).
@@ -23,7 +27,9 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_distribution, bench_k, bench_memory,
                             bench_pipeline, bench_pruning, bench_queries,
-                            bench_service, bench_span, bench_wave)
+                            bench_service, bench_span, bench_streaming,
+                            bench_wave)
+    from benchmarks.common import SMOKE
 
     print("name,us_per_call,derived")
     failures = 0
@@ -33,7 +39,7 @@ def main() -> None:
         print(f"{name},{seconds * 1e6:.1f},{derived}")
 
     try:
-        for r in bench_queries.run():
+        for r in ([] if SMOKE else bench_queries.run()):
             tag = f"queries/{r['graph']}/q{r['id']}"
             row(tag + "/otcd", r["t_otcd_s"],
                 f"results={r['n_results']}")
@@ -48,7 +54,7 @@ def main() -> None:
         traceback.print_exc()
 
     try:
-        for r in bench_pruning.run():
+        for r in ([] if SMOKE else bench_pruning.run()):
             row(f"pruning/{r['graph']}", 0.0,
                 f"pruned%={r['pct_total_pruned']:.1f} "
                 f"(por={r['pct_por']:.1f} pou={r['pct_pou']:.1f} "
@@ -58,7 +64,7 @@ def main() -> None:
         traceback.print_exc()
 
     try:
-        for r in bench_k.run():
+        for r in ([] if SMOKE else bench_k.run()):
             row(f"impact_k/{r['graph']}/k{r['k']}", r["t_otcd_s"],
                 f"cores={r['n_cores']} cc={r['n_components']} "
                 f"tcd_s={r['t_tcd_s']:.3f}")
@@ -67,7 +73,7 @@ def main() -> None:
         traceback.print_exc()
 
     try:
-        for r in bench_span.run():
+        for r in ([] if SMOKE else bench_span.run()):
             row(f"impact_span/{r['graph']}/x{r['span_uts']}",
                 r["t_otcd_s"],
                 f"cells={r['cells_total']} cores={r['n_cores']} "
@@ -77,7 +83,7 @@ def main() -> None:
         traceback.print_exc()
 
     try:
-        for r in bench_memory.run():
+        for r in ([] if SMOKE else bench_memory.run()):
             row(f"memory/{r['graph']}", 0.0,
                 f"tel_bytes={r['tel_bytes']} "
                 f"bytes_per_edge={r['tel_bytes_per_edge']:.1f}")
@@ -86,7 +92,7 @@ def main() -> None:
         traceback.print_exc()
 
     try:
-        for r in bench_distribution.run():
+        for r in ([] if SMOKE else bench_distribution.run()):
             row(f"distribution/{r['graph']}", r["wall_s"],
                 f"cores={r['n_cores']}")
     except Exception:
@@ -117,8 +123,8 @@ def main() -> None:
                     f"bytes/step={r['bytes_per_step']:.0f}")
             else:
                 row("pipeline/speedup", 0.0,
-                    f"pipelined_vs_stepwise="
-                    f"{r['speedup_pipelined_vs_stepwise']:.2f}x")
+                    f"wave_vs_serial="
+                    f"{r['speedup_wave_vs_serial']:.2f}x")
     except Exception:
         failures += 1
         traceback.print_exc()
@@ -142,9 +148,33 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
 
+    try:
+        strows = bench_streaming.run()
+        trajectory["streaming"] = strows
+        for r in strows:
+            if r["bench"] == "streaming":
+                row(f"streaming/{r['mode']}", r["t_s"],
+                    f"qps={r['qps']:.2f} occ={r['occupancy']:.2f}")
+            elif r["bench"] == "streaming_ingest":
+                row("streaming/ingest", r["t_s"],
+                    f"qps={r['qps']:.2f} epochs={r['epochs_ingested']} "
+                    f"p95={r['p95_ms']:.0f}ms "
+                    f"midflight={r['admitted_midflight']}")
+            else:
+                row("streaming/speedup", 0.0,
+                    f"clustered_vs_union="
+                    f"{r['speedup_clustered_vs_union']:.2f}x "
+                    f"(union_E={r['union_window_edges']} "
+                    f"cluster_E<={r['max_cluster_window_edges']})")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
     # only a complete trajectory may replace the tracked file — a partial
-    # write would clobber the last good cross-PR history
-    if {"wave", "pipeline", "service"} <= trajectory.keys():
+    # write would clobber the last good cross-PR history (and smoke-sized
+    # runs never overwrite the measured numbers)
+    if not SMOKE and \
+            {"wave", "pipeline", "service", "streaming"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

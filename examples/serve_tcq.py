@@ -67,13 +67,15 @@ def main():
         if s is not None:
             print(f"  [pool] {s.device_steps} steps, "
                   f"occupancy {s.occupancy:.1f} cells/step")
-        # dynamic arrival between batches (paper §6.1)
+        # dynamic arrival between batches (paper §6.1): incremental
+        # merge-append + in-place engine epoch swap — no rebuild
         try:
             u, v, t = next(arrivals)
             t = t + hi  # future timestamps
             g2 = stream.push(u, v, t)
-            eng = TCQEngine(g2)
-            print(f"  [stream] +{len(u)} edges -> |E|={g2.num_edges}")
+            eng.update_graph(g2)
+            print(f"  [stream] +{len(u)} edges -> |E|={g2.num_edges} "
+                  f"(epoch {eng.epoch})")
         except StopIteration:
             pass
     print(f"\nserved {len(reqs)} requests; "

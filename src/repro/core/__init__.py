@@ -1,8 +1,12 @@
 """The paper's contribution: scalable time-range k-core queries (TCQ).
 
 Public API:
-  TemporalGraph      — host-side ArrayTEL (build / dynamic append / ship)
-  TCQEngine          — compiled query engine for one graph
+  TemporalGraph      — host-side ArrayTEL (build / epoch-versioned
+                       incremental append / ship)
+  TCQEngine          — compiled query engine for one graph (streaming:
+                       update_graph installs new epochs in place)
+  TCQService         — continuous serving runtime: window-clustered lane
+                       pools, mid-flight admission, epoch-pinned snapshots
   temporal_kcore_query — one-shot convenience wrapper
   tcd / tcd_batch    — the TCD operation (truncate + frontier peel + TTI)
   brute_force_query  — oracle
@@ -18,4 +22,6 @@ from repro.core.otcd import TCQEngine, temporal_kcore_query  # noqa: F401
 from repro.core.results import CoreResult, QueryStats, TCQResult  # noqa: F401
 from repro.core.scheduler import (EmptyStaircase, QueryState,  # noqa: F401
                                   autotune_wave)
+from repro.core.service import (TCQService, TCQTicket,  # noqa: F401
+                                cluster_windows)
 from repro.core.tcd import TCDResult, coreness, tcd, tcd_batch  # noqa: F401

@@ -15,10 +15,14 @@ The pipeline is split in two layers:
   are immediately refilled with another query's cells — the fused step
   stays full under concurrent traffic instead of decaying with a single
   query's schedule.  ``k``/``h`` ride along as per-lane [W] vectors, so
-  one step carries cells from queries with different thresholds.
+  one step carries cells from queries with different thresholds.  The
+  pool is a *live queue*: ``run_pool``'s optional ``admit`` hook is
+  polled whenever lanes free, so a streaming service
+  (``core/service.py``) can admit newly arrived queries mid-flight with
+  no drain barrier between request batches.
 
 Device mechanics (carried over from the single-query pipeline, measured
-3.7x over the seed stepwise engine):
+3.7x over the seed stepwise engine, which was retired after PR 2):
 
 * **Persistent lane state** — the [W, V] buffer is donated through every
   ``wave_step``; exhausted lanes are refilled *in place* with
@@ -45,17 +49,20 @@ Device mechanics (carried over from the single-query pipeline, measured
   their k_max band analysis) are built once per ``TCQEngine`` by the
   dispatching wrapper: compiled Pallas on TPU, XLA segment-sum elsewhere.
 
-The pipeline peels against a *windowed* TEL (``TCQEngine._window_tel``):
-for a batch, one TEL truncated to the union window serves every lane —
-per-lane ``ts``/``te`` keep each query's exact windowed semantics, so
-cross-query packing is bit-identical to running each query alone.
+The pipeline peels against a *windowed* TEL (``TCQEngine._window_tel``,
+epoch-keyed so graph updates can never serve stale truncations): for a
+pool, one TEL truncated to the union window serves every lane — per-lane
+``ts``/``te`` keep each query's exact windowed semantics, so cross-query
+packing is bit-identical to running each query alone.  The streaming
+service clusters co-admitted requests by window overlap and runs one
+pool per cluster, so each pool's TEL stays tight.
 """
 
 from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -190,19 +197,36 @@ class WavePipeline:
         self.run_pool([qs], stats)
         return qs.decode_results(self.num_vertices)
 
-    def run_pool(self, states: List[QueryState],
-                 pool_stats: QueryStats) -> None:
-        """Drain a pool of queries through the shared lane buffer.
+    def run_pool(self, states: List[QueryState], pool_stats: QueryStats,
+                 admit: Optional[Callable[[], List[QueryState]]] = None
+                 ) -> None:
+        """Drain a live pool of queries through the shared lane buffer.
 
         Cells are claimed round-robin across queries, so one device step
         mixes lanes from many (k, h, window) queries; each query's results
         accumulate in its own QueryState (bit-identical to running it
         alone — packing changes lane placement, never pruning soundness,
         because every QueryState keeps private pruning/dedup state).
+
+        ``admit`` turns the fixed state list into a *live queue*: it is
+        polled every time a slot reassembles (i.e. whenever lanes free
+        up) and may hand back freshly admitted QueryStates, which join
+        the claimable rotation immediately — mid-flight admission with
+        no drain barrier.  The pool only ends once every in-flight lane
+        has retired *and* ``admit`` comes back empty, so a streaming
+        service can keep the fused step full across request arrivals.
         """
         W = self.wave
         claimable = deque(s for s in states if s.n > 0)
         occupied_total = 0
+
+        def refill() -> None:
+            if admit is None:
+                return
+            for s in admit():
+                if s.n > 0:
+                    claimable.append(s)
+                    pool_stats.admissions += 1
 
         def claim() -> Optional[Tuple[QueryState, RowCursor]]:
             while claimable:
@@ -216,6 +240,7 @@ class WavePipeline:
 
         def assemble(slot: _Slot) -> None:
             """Claim ready cells into free lanes and refill their masks."""
+            refill()
             for li in range(W):
                 if slot.lanes[li] is not None:
                     continue
@@ -286,18 +311,25 @@ class WavePipeline:
         # prime every slot, then cycle the ring: retire+reassemble+
         # redispatch one slot while the other D-1 slots' steps execute on
         # device — host pruning bookkeeping overlaps device compute, and
-        # D-1 steps are always in flight before we block on scalars
+        # D-1 steps are always in flight before we block on scalars.
+        # Idle slots reassemble too (a live queue may have admitted new
+        # queries since their last dispatch), and the ring only stops
+        # once nothing is in flight and the final admit poll is empty.
         slots = [_Slot(W, self.num_vertices) for _ in range(self.depth)]
         for slot in slots:
             assemble(slot)
             dispatch(slot)
         cur = 0
-        while any(s.inflight is not None for s in slots):
+        while True:
+            if all(s.inflight is None for s in slots):
+                refill()
+                if not claimable:
+                    break
             slot = slots[cur]
             if slot.inflight is not None:
                 retire(slot)
-                assemble(slot)
-                dispatch(slot)
+            assemble(slot)
+            dispatch(slot)
             cur = (cur + 1) % self.depth
 
         if pool_stats.device_steps:

@@ -17,15 +17,48 @@ boolean liveness masks:
     bool per vertex per in-flight query.
 
 Host-side construction is numpy; ``device_tel()`` ships immutable arrays to
-the accelerator once per graph.
+the accelerator once per graph *epoch*.  Streaming appends
+(:meth:`TemporalGraph.add_edges`) are an incremental sorted-run merge —
+O(E + B log B) for a batch of B edges, not a full O(E log E) re-sort — and
+bump the graph's ``epoch`` so downstream caches (the engine's window-TEL
+cache, the service's admission pinning) can tell snapshots apart.  Device
+buffers may be padded to power-of-two *capacities* with never-active
+sentinel rows, so a growing graph reuses compiled programs until it
+outgrows its capacity class (capacity-doubling, amortized O(1) recompiles).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import numpy as np
+
+_I32_MIN = np.iinfo(np.int32).min
+
+
+def pow2_capacity(n: int, floor: int = 128) -> int:
+    """Smallest power of two >= max(n, floor) — the capacity classes used
+    for padded device buffers (and the window-TEL edge buckets)."""
+    return max(floor, 1 << max(0, int(n) - 1).bit_length())
+
+
+def _merge_sorted_unique(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Union of two sorted-unique int arrays in O(|a| + |b| log |a|)."""
+    if b.size == 0:
+        return a
+    if a.size == 0:
+        return b
+    pos_a = np.searchsorted(a, b)
+    present = (pos_a < a.size) & (a[np.minimum(pos_a, a.size - 1)] == b)
+    fresh = b[~present]
+    merged = np.empty(a.size + fresh.size, dtype=a.dtype)
+    pos = np.searchsorted(a, fresh) + np.arange(fresh.size)
+    mask = np.ones(merged.size, dtype=bool)
+    mask[pos] = False
+    merged[pos] = fresh
+    merged[mask] = a
+    return merged
 
 
 class DeviceTEL(NamedTuple):
@@ -34,6 +67,13 @@ class DeviceTEL(NamedTuple):
     Shapes: E edges, P distinct vertex pairs ("links"), V vertices.
     Edges are sorted by (pair_id, t); pairs are sorted by (u, v) with u < v;
     half-pairs (2P incidences) are sorted by their vertex id.
+
+    Arrays may be *capacity padded* (see :meth:`TemporalGraph.tel_arrays`):
+    sentinel edges carry ``t = int32 min`` (outside every representable
+    window) and ``pair_id`` equal to the padded pair count, sentinel
+    half-pairs point at the padded vertex count — both are dropped by the
+    segment reductions, so padded and exact TELs peel identically while
+    the padded shapes keep compiled programs reusable across epochs.
     """
 
     src: np.ndarray        # [E] int32
@@ -57,7 +97,14 @@ class DeviceTEL(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class TemporalGraph:
-    """Host-side temporal multigraph in canonical ArrayTEL layout."""
+    """Host-side temporal multigraph in canonical ArrayTEL layout.
+
+    Immutable: :meth:`add_edges` returns a *new* graph with ``epoch`` + 1,
+    so every epoch is a zero-copy-consistent snapshot — in-flight queries
+    pinned to an older epoch keep peeling their snapshot's arrays while
+    new arrivals land (the streaming service's snapshot-consistency
+    contract rests on exactly this).
+    """
 
     src: np.ndarray          # [E] int32, canonical order (pair_id, t)
     dst: np.ndarray          # [E] int32
@@ -67,6 +114,7 @@ class TemporalGraph:
     pair_v: np.ndarray       # [P] int32
     num_vertices: int
     unique_ts: np.ndarray    # sorted unique timestamps
+    epoch: int = 0           # bumped by every add_edges batch
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -123,25 +171,74 @@ class TemporalGraph:
 
     # --------------------------------------------------------------- dynamic
     def add_edges(self, u, v, t) -> "TemporalGraph":
-        """Dynamic-graph extension (paper §6.1): amortized batch append.
+        """Dynamic-graph extension (paper §6.1): incremental merge-append.
 
         The paper appends one edge in O(1) by pointer surgery; the array
-        equivalent is a batched rebuild of the (pair_id, t) ordering, O(E log E)
-        amortized over the batch.  Timestamps may be arbitrary (late data is
-        allowed — stricter than the paper, which assumes monotone arrival).
+        equivalent is a *sorted-run merge*: the existing canonical arrays are
+        already sorted by (pair_id, t), so a batch of B new edges only needs
+        its own O(B log B) sort plus an O(E + B log E) two-run merge — never
+        a full O(E log E) re-sort.  The result is bit-identical to a
+        from-scratch :meth:`from_edges` rebuild (same canonical arrays, same
+        pair factorization), with ``epoch`` bumped by one.  Timestamps may
+        be arbitrary (late data is allowed — stricter than the paper, which
+        assumes monotone arrival), and new vertices/pairs may appear.
         """
-        u = np.asarray(u, dtype=np.int32)
-        v = np.asarray(v, dtype=np.int32)
-        t = np.asarray(t, dtype=np.int32)
+        u = np.asarray(u, dtype=np.int64).ravel()
+        v = np.asarray(v, dtype=np.int64).ravel()
+        t = np.asarray(t, dtype=np.int64).ravel()
         if not (u.shape == v.shape == t.shape):
             raise ValueError("u, v, t must have identical shapes")
+        keep = u != v                       # self loops never contribute
+        u, v, t = u[keep], v[keep], t[keep]
         if u.size == 0:
             return self
-        u_all = np.concatenate([self.src, u])
-        v_all = np.concatenate([self.dst, v])
-        t_all = np.concatenate([self.t, t])
-        n_vert = max(self.num_vertices, int(max(np.max(u), np.max(v))) + 1)
-        return TemporalGraph.from_edges(u_all, v_all, t_all, n_vert)
+        lo = np.minimum(u, v)
+        hi = np.maximum(u, v)
+        n_vert = max(self.num_vertices, int(hi.max()) + 1)
+        # canonicalize the batch: O(B log B), the only sort in the append
+        order = np.lexsort((t, hi, lo))
+        lo, hi, t = lo[order], hi[order], t[order]
+
+        # --- merge the pair tables (64-bit (u, v) keys, both runs sorted)
+        old_keys = (self.pair_u.astype(np.int64) << 32) | \
+            self.pair_v.astype(np.int64)
+        batch_keys = (lo << 32) | hi
+        batch_pairs = np.unique(batch_keys)         # sorted-input unique: O(B)
+        merged_keys = _merge_sorted_unique(old_keys, batch_pairs)
+        # old pair id -> merged pair id is strictly increasing, so the old
+        # edges stay sorted under the relabel
+        old_pid_map = np.searchsorted(merged_keys, old_keys).astype(np.int64)
+        pid_old = old_pid_map[self.pair_id.astype(np.int64)]
+        pid_batch = np.searchsorted(merged_keys, batch_keys).astype(np.int64)
+
+        # --- merge the edge runs on the composite (pair_id, t) key
+        t_old = self.t.astype(np.int64)
+        ckey_old = (pid_old << 32) | (t_old - _I32_MIN)
+        ckey_batch = (pid_batch << 32) | (t - _I32_MIN)
+        pos_b = np.searchsorted(ckey_old, ckey_batch, side="right") + \
+            np.arange(ckey_batch.size)
+        n_all = self.num_edges + lo.size
+        is_new = np.zeros(n_all, dtype=bool)
+        is_new[pos_b] = True
+
+        def _interleave(old_col, new_col, dtype=np.int32):
+            out = np.empty(n_all, dtype=dtype)
+            out[pos_b] = new_col
+            out[~is_new] = old_col
+            return out
+
+        return TemporalGraph(
+            src=_interleave(self.src, lo),
+            dst=_interleave(self.dst, hi),
+            t=_interleave(self.t, t),
+            pair_id=_interleave(pid_old, pid_batch),
+            pair_u=(merged_keys >> 32).astype(np.int32),
+            pair_v=(merged_keys & 0xFFFFFFFF).astype(np.int32),
+            num_vertices=int(n_vert),
+            unique_ts=_merge_sorted_unique(
+                self.unique_ts, np.unique(t).astype(np.int32)),
+            epoch=self.epoch + 1,
+        )
 
     # ----------------------------------------------------------------- views
     @property
@@ -163,29 +260,65 @@ class TemporalGraph:
         m = (self.t >= ts) & (self.t <= te)
         return int(m.sum()), int(np.unique(self.t[m]).size)
 
-    def device_tel(self) -> DeviceTEL:
-        """Ship to device.  Half-pair incidence is derived here (sorted by
-        vertex) so the degree reduction also sees sorted segment ids."""
-        import jax.numpy as jnp
+    def tel_arrays(self, *, edge_capacity: Optional[int] = None,
+                   pair_capacity: Optional[int] = None,
+                   vertex_capacity: Optional[int] = None
+                   ) -> Dict[str, np.ndarray]:
+        """Host-side TEL arrays, optionally padded to capacity classes.
 
-        p = self.num_pairs
+        Half-pair incidence is derived here (sorted by vertex) so the
+        degree reduction also sees sorted segment ids.  With capacities,
+        sentinel rows pad each array family: sentinel edges carry
+        ``t = int32 min`` (outside every window) and ``pair_id`` equal to
+        the padded pair count; sentinel half-pairs carry ``hp_src`` equal
+        to ``vertex_capacity`` — out-of-range segment ids that the scatter
+        reductions drop.  Compiled programs therefore depend only on the
+        *capacity* shapes, not the live counts, which is what lets a
+        streaming engine absorb appends without recompiling.
+        """
+        e, p = self.num_edges, self.num_pairs
+        e_cap = e if edge_capacity is None else int(edge_capacity)
+        p_cap = p if pair_capacity is None else int(pair_capacity)
+        v_cap = (self.num_vertices if vertex_capacity is None
+                 else int(vertex_capacity))
+        if e_cap < e or p_cap < p or v_cap < self.num_vertices:
+            raise ValueError("capacity below live count")
+
+        def pad(a, n, fill, dtype=np.int32):
+            if n == a.shape[0]:
+                return a.astype(dtype, copy=False)
+            out = np.full(n, fill, dtype=dtype)
+            out[:a.shape[0]] = a
+            return out
+
         hp_src = np.concatenate([self.pair_u, self.pair_v])
         hp_pair = np.concatenate(
-            [np.arange(p, dtype=np.int32), np.arange(p, dtype=np.int32)]
-        )
+            [np.arange(p, dtype=np.int32), np.arange(p, dtype=np.int32)])
         order = np.argsort(hp_src, kind="stable")
-        time_perm = np.argsort(self.t, kind="stable").astype(np.int32)
-        return DeviceTEL(
-            src=jnp.asarray(self.src),
-            dst=jnp.asarray(self.dst),
-            t=jnp.asarray(self.t),
-            pair_id=jnp.asarray(self.pair_id),
-            pair_u=jnp.asarray(self.pair_u),
-            pair_v=jnp.asarray(self.pair_v),
-            hp_src=jnp.asarray(hp_src[order].astype(np.int32)),
-            hp_pair=jnp.asarray(hp_pair[order].astype(np.int32)),
-            time_perm=jnp.asarray(time_perm),
-        )
+        t_pad = pad(self.t, e_cap, _I32_MIN)
+        return {
+            "src": pad(self.src, e_cap, 0),
+            "dst": pad(self.dst, e_cap, 0),
+            "t": t_pad,
+            "pair_id": pad(self.pair_id, e_cap, p_cap),
+            "pair_u": pad(self.pair_u, p_cap, 0),
+            "pair_v": pad(self.pair_v, p_cap, 0),
+            "hp_src": pad(hp_src[order].astype(np.int32), 2 * p_cap, v_cap),
+            "hp_pair": pad(hp_pair[order].astype(np.int32), 2 * p_cap, 0),
+            "time_perm": np.argsort(t_pad, kind="stable").astype(np.int32),
+        }
+
+    def device_tel(self, *, edge_capacity: Optional[int] = None,
+                   pair_capacity: Optional[int] = None,
+                   vertex_capacity: Optional[int] = None) -> DeviceTEL:
+        """Ship to device, optionally padded to capacity classes (see
+        :meth:`tel_arrays`).  Default (no capacities) is the exact TEL."""
+        import jax.numpy as jnp
+
+        arrs = self.tel_arrays(edge_capacity=edge_capacity,
+                               pair_capacity=pair_capacity,
+                               vertex_capacity=vertex_capacity)
+        return DeviceTEL(**{k: jnp.asarray(v) for k, v in arrs.items()})
 
     def memory_bytes(self) -> int:
         """ArrayTEL footprint (paper Table 5 analogue)."""

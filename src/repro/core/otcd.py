@@ -14,7 +14,7 @@ Enumeration is over *unique* timestamps inside [Ts, Te] (column index space);
 cells between adjacent real timestamps are exact duplicates of their
 right-snap and are never scheduled (a strict, exact strengthening of PoR).
 
-Three execution modes share that schedule:
+Two execution modes share that schedule:
 
 * ``serial`` — paper-faithful: one cell per device program (`tcd.tcd`),
   decremental warm starts along each row (Theorem 1).
@@ -24,37 +24,80 @@ Three execution modes share that schedule:
   per-lane (ts, te, k, h), packed O(W·V/32) result transfer with deferred
   bulk decode, and a depth-D slot ring so host pruning bookkeeping
   overlaps device compute.  The Pallas ``banded_segsum`` degree closures
-  are built once per engine.
-* ``wave_stepwise`` — the seed batched engine, retained as the benchmark
-  baseline for the pipeline (one host round-trip per step, per-core [V]
-  bool transfers, re-stacked lane batches).
+  are built once per engine (epoch).
+
+(The seed stepwise engine — one blocking host round-trip per step — served
+as the pipeline's benchmark baseline through PR 2 and was retired once the
+BENCH_wave.json trajectory had cross-PR history; ``bench_pipeline`` now
+gates wave mode against the serial engine.)
+
+**Streaming.**  The engine is *epoch-versioned*: ``update_graph`` installs
+a new immutable snapshot (produced by ``TemporalGraph.add_edges``'s
+incremental merge-append), bumps ``engine.epoch``, and refreshes the
+device TEL inside power-of-two *capacity classes* — edge/pair/vertex
+buffers are sentinel-padded to capacities that only grow by doubling, so
+a streaming append almost never changes a compiled program's shapes.
+``_window_tel`` is keyed by ``(epoch, Ts, Te)`` and each cache entry pins
+the TEL *and* the degree closures it was built with, so a graph update
+can never serve a stale truncation to a new query nor a fresh truncation
+to a query pinned to an older epoch (snapshot consistency — the contract
+``core/service.py``'s mid-flight admission is built on).
 
 :meth:`TCQEngine.query_batch` serves *many* queries through one shared
-lane pool: cells from concurrent queries with heterogeneous (k, h,
-window) pack into the same fused steps (per-lane thresholds), keeping
-the device full while each query retires independently with results
-bit-identical to running it alone.
+lane pool off a single union-window TEL; the streaming
+:class:`~repro.core.service.TCQService` goes further — window-clustered
+pools with mid-flight admission — and uses this engine underneath.
 """
 
 from __future__ import annotations
 
 import time
-from collections import OrderedDict, defaultdict, deque
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from collections import OrderedDict, defaultdict
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tcd as tcd_mod
 from repro.core.engine import WavePipeline
-from repro.core.graph import DeviceTEL, TemporalGraph
+from repro.core.graph import DeviceTEL, TemporalGraph, pow2_capacity
 from repro.core.intervals import IntervalSet
 from repro.core.results import CoreResult, QueryStats, TCQResult
-from repro.core.scheduler import EmptyStaircase, QueryState, autotune_wave
-from repro.core.wave import make_segsum_fns
+from repro.core.scheduler import QueryState, autotune_wave
 
 _I32_MAX = np.iinfo(np.int32).max
+_I32_MIN = np.iinfo(np.int32).min
 _WINDOW_CACHE_MAX = 64
+_EPOCH_AUX_MAX = 8          # snapshot pair-table LRU (epochs still in flight)
+
+
+class WindowTEL(NamedTuple):
+    """One window-truncated TEL plus everything needed to peel it.
+
+    The degree closures and the device vertex width are *pinned per
+    entry*: they were built against this entry's capacity classes, so a
+    later capacity growth (or epoch bump) can never mix a cached TEL
+    with incompatible closures.
+    """
+
+    tel: DeviceTEL
+    seg_pair: object         # edge->pair segsum closure for this TEL
+    seg_vert: object         # halfpair->vertex segsum closure
+    num_vertices: int        # device vertex width (capacity, >= live V)
+    window_edges: int        # live (non-sentinel) edges inside the window
+
+
+class _EpochAux(NamedTuple):
+    """Per-epoch pair-table device arrays + closures (capacity padded)."""
+
+    pair_u: object
+    pair_v: object
+    hp_src: object
+    hp_pair: object
+    seg_pair_full: object    # full-graph pair closure (XLA path reuse)
+    seg_vert: object
+    pair_cap: int
+    v_cap: int
 
 
 class TCQEngine:
@@ -64,60 +107,164 @@ class TCQEngine:
     forces the Pallas banded kernel (interpret mode off-TPU), False the
     XLA segment-sum reference, None (default) auto-dispatches.  The
     closures — including the kernel's k_max band analysis — are built
-    once here and reused by every wave query on this engine.
+    once per engine epoch and reused by every wave query on this engine.
+
+    The engine is streaming-capable: :meth:`update_graph` installs a new
+    graph snapshot under a fresh epoch.  ``num_vertices`` is the *device*
+    vertex width (a capacity ≥ the live vertex count once the graph has
+    grown past its initial size); padded vertices have no incident edges,
+    peel out on the first fixpoint iteration for any k >= 1, and never
+    appear in results.
     """
 
     def __init__(self, graph: TemporalGraph, degree_fn=None, *,
                  use_kernel: Optional[bool] = None):
         from repro.kernels.segdeg.ops import on_tpu
 
-        self.graph = graph
-        self.tel = graph.device_tel()
-        self.num_vertices = graph.num_vertices
         self._degree_fn = degree_fn
-        self._ones = jnp.ones((graph.num_vertices,), dtype=bool)
         self._use_kernel = on_tpu() if use_kernel is None else use_kernel
-        self._seg_pair, self._seg_vert = make_segsum_fns(
-            graph, use_kernel=self._use_kernel)
-        self._win_cache: "OrderedDict[Tuple[int, int], tuple]" = OrderedDict()
+        self.epoch = 0
+        # (epoch, Ts, Te) -> WindowTEL, LRU
+        self._win_cache: "OrderedDict[Tuple[int, int, int], WindowTEL]" = \
+            OrderedDict()
+        # epoch -> _EpochAux, LRU (snapshots with queries still in flight)
+        self._epoch_aux: "OrderedDict[int, _EpochAux]" = OrderedDict()
+        self._install(graph, initial=True)
+
+    # ------------------------------------------------------------- streaming
+    def _install(self, graph: TemporalGraph, initial: bool) -> None:
+        """(Re)build the device TEL inside the engine's capacity classes.
+
+        Initial capacities are exact (a static graph pays zero padding);
+        once streaming appends outgrow a capacity it jumps to the next
+        power of two, so recompiles are amortized O(1) over a stream and
+        shapes are shared across epochs in the same capacity class.
+        """
+        from repro.kernels.segdeg.ops import make_banded_segsum
+
+        if initial:
+            self._edge_cap = graph.num_edges
+            self._pair_cap = graph.num_pairs
+            self._v_cap = graph.num_vertices
+            grew_pairs = grew_verts = True
+        else:
+            grew_pairs = graph.num_pairs > self._pair_cap
+            grew_verts = graph.num_vertices > self._v_cap
+            if graph.num_edges > self._edge_cap:
+                self._edge_cap = pow2_capacity(graph.num_edges)
+            if grew_pairs:
+                self._pair_cap = pow2_capacity(graph.num_pairs)
+            if grew_verts:
+                self._v_cap = pow2_capacity(graph.num_vertices)
+        self.graph = graph
+        arrs = graph.tel_arrays(edge_capacity=self._edge_cap,
+                                pair_capacity=self._pair_cap,
+                                vertex_capacity=self._v_cap)
+        self.tel = DeviceTEL(**{k: jnp.asarray(v) for k, v in arrs.items()})
+        if initial or grew_verts:
+            self.num_vertices = self._v_cap
+            self._ones = jnp.ones((self._v_cap,), dtype=bool)
+        # closures are capacity-shaped but id-dependent (the Pallas band
+        # analysis follows the segment ids), so they refresh per epoch;
+        # the XLA path's partials are free to rebuild
+        self._seg_pair = make_banded_segsum(
+            arrs["pair_id"], self._pair_cap, use_kernel=self._use_kernel)
+        self._seg_vert = make_banded_segsum(
+            arrs["hp_src"], self._v_cap, use_kernel=self._use_kernel)
+        aux = _EpochAux(self.tel.pair_u, self.tel.pair_v, self.tel.hp_src,
+                        self.tel.hp_pair, self._seg_pair, self._seg_vert,
+                        self._pair_cap, self._v_cap)
+        self._remember_aux(self.epoch, aux)
+
+    def update_graph(self, graph: TemporalGraph) -> int:
+        """Install a new graph snapshot (streaming append) under a fresh
+        epoch; returns the new epoch.  In-flight queries pinned to older
+        epochs are untouched — their window TELs (and the snapshots they
+        were truncated from) stay valid and epoch-keyed.  Host cost is
+        O(E) array padding; device programs recompile only when a
+        capacity class grows (amortized O(1) by doubling)."""
+        self.epoch += 1
+        self._install(graph, initial=False)
+        return self.epoch
+
+    def _remember_aux(self, epoch: int, aux: _EpochAux) -> None:
+        self._epoch_aux[epoch] = aux
+        self._epoch_aux.move_to_end(epoch)
+        while len(self._epoch_aux) > _EPOCH_AUX_MAX:
+            self._epoch_aux.popitem(last=False)
+
+    def _aux_for(self, epoch: int, g: TemporalGraph) -> _EpochAux:
+        """Pair-table device arrays + closures for one epoch's snapshot,
+        padded to the engine's *current* capacity classes (snapshots are
+        ancestors of the current graph, so they always fit)."""
+        from repro.kernels.segdeg.ops import make_banded_segsum
+
+        hit = self._epoch_aux.get(epoch)
+        if hit is not None:
+            self._epoch_aux.move_to_end(epoch)
+            return hit
+        if g.num_pairs > self._pair_cap or g.num_vertices > self._v_cap:
+            raise ValueError(
+                "snapshot exceeds engine capacities — not an ancestor of "
+                "the engine's current graph")
+        arrs = g.tel_arrays(pair_capacity=self._pair_cap,
+                            vertex_capacity=self._v_cap)
+        aux = _EpochAux(
+            jnp.asarray(arrs["pair_u"]), jnp.asarray(arrs["pair_v"]),
+            jnp.asarray(arrs["hp_src"]), jnp.asarray(arrs["hp_pair"]),
+            make_banded_segsum(arrs["pair_id"], self._pair_cap,
+                               use_kernel=self._use_kernel),
+            make_banded_segsum(arrs["hp_src"], self._v_cap,
+                               use_kernel=self._use_kernel),
+            self._pair_cap, self._v_cap)
+        self._remember_aux(epoch, aux)
+        return aux
 
     # -------------------------------------------------------- window slicing
-    def _window_tel(self, Ts: int, Te: int):
-        """(tel, seg_pair, window_edges): device TEL truncated to [Ts, Te].
+    def _window_tel(self, Ts: int, Te: int, *,
+                    graph: Optional[TemporalGraph] = None,
+                    epoch: Optional[int] = None) -> WindowTEL:
+        """Device TEL truncated to [Ts, Te] for one epoch's snapshot.
 
         Every cell of a query's schedule lies inside [Ts, Te], so both the
         serial engine and the wave pipeline peel against only the window's
-        edges — per-iteration work scales with the window, not the whole
-        graph.  Edge arrays are padded to a power-of-two bucket with
-        sentinel edges (t=int32 min, pair_id=P, ignored by both degree
+        edges — per-iteration work scales with the window, not |E|.  Edge
+        arrays are padded to a power-of-two bucket with sentinel edges
+        (t=int32 min, pair_id=pair capacity, ignored by both degree
         paths), so compiled programs are shared across windows of similar
-        size; the vertex-side segsum closure is window-independent and
+        size; the vertex-side segsum closure is capacity-shaped and
         always reused.  On the XLA degree path the pair-side closure is
         reused too (it only fixes num_segments); the Pallas path rebuilds
         it because its k_max band analysis depends on the windowed segment
-        ids.  The cache is LRU (hits move to the back, the front is
-        evicted): serving workloads with a hot set of windows keep their
-        compiled buckets instead of churning recompiles.
+        ids.  The cache is LRU and keyed by ``(epoch, Ts, Te)``: a graph
+        update can never serve a stale truncation (new epoch, new key),
+        while queries pinned to an older epoch — pass ``graph``/``epoch``
+        explicitly — keep hitting their snapshot's entries.  Each entry
+        pins the closures and device vertex width it was built with.
         """
-        key = (int(Ts), int(Te))
+        g = self.graph if graph is None else graph
+        ep = self.epoch if epoch is None else int(epoch)
+        key = (ep, int(Ts), int(Te))
         hit = self._win_cache.get(key)
         if hit is not None:
             self._win_cache.move_to_end(key)
             return hit
-        g = self.graph
+        aux = self._aux_for(ep, g)
         idx = np.flatnonzero((g.t >= Ts) & (g.t <= Te))
         e = int(idx.size)
-        if e >= g.num_edges:
-            out = (self.tel, self._seg_pair, e)
+        if ep == self.epoch and e >= g.num_edges:
+            out = WindowTEL(self.tel, self._seg_pair, self._seg_vert,
+                            self._v_cap, e)
         else:
-            bucket = max(128, 1 << max(0, e - 1).bit_length())
+            bucket = pow2_capacity(e)
             pad = bucket - e
-            p = g.num_pairs
             # sentinel timestamp must be below every representable window
-            # (t = -1 would collide with graphs using negative timestamps)
-            t_pad = np.iinfo(np.int32).min
-            t_w = np.concatenate([g.t[idx], np.full(pad, t_pad, np.int32)])
-            pid_w = np.concatenate([g.pair_id[idx], np.full(pad, p, np.int32)])
+            # (t = -1 would collide with graphs using negative timestamps);
+            # sentinel pair id = pair capacity (dropped by the scatter)
+            t_w = np.concatenate(
+                [g.t[idx], np.full(pad, _I32_MIN, np.int32)])
+            pid_w = np.concatenate(
+                [g.pair_id[idx], np.full(pad, aux.pair_cap, np.int32)])
             tel = DeviceTEL(
                 src=jnp.asarray(np.concatenate(
                     [g.src[idx], np.zeros(pad, np.int32)])),
@@ -125,36 +272,32 @@ class TCQEngine:
                     [g.dst[idx], np.zeros(pad, np.int32)])),
                 t=jnp.asarray(t_w),
                 pair_id=jnp.asarray(pid_w),
-                pair_u=self.tel.pair_u,
-                pair_v=self.tel.pair_v,
-                hp_src=self.tel.hp_src,
-                hp_pair=self.tel.hp_pair,
+                pair_u=aux.pair_u,
+                pair_v=aux.pair_v,
+                hp_src=aux.hp_src,
+                hp_pair=aux.hp_pair,
                 time_perm=jnp.asarray(
                     np.argsort(t_w, kind="stable").astype(np.int32)),
             )
             if self._use_kernel:
                 from repro.kernels.segdeg.ops import make_banded_segsum
 
-                seg_pair = make_banded_segsum(pid_w, p, use_kernel=True)
+                seg_pair = make_banded_segsum(pid_w, aux.pair_cap,
+                                              use_kernel=True)
             else:
-                seg_pair = self._seg_pair
-            out = (tel, seg_pair, e)
+                seg_pair = aux.seg_pair_full
+            out = WindowTEL(tel, seg_pair, aux.seg_vert, aux.v_cap, e)
         if len(self._win_cache) >= _WINDOW_CACHE_MAX:
             self._win_cache.popitem(last=False)     # evict least-recent
         self._win_cache[key] = out
         return out
 
     # ------------------------------------------------------------- primitives
-    def _tcd(self, alive, ts, te, k, h, tel: Optional[DeviceTEL] = None):
-        return tcd_mod.tcd(self.tel if tel is None else tel,
-                           alive, ts, te, k, h,
-                           num_vertices=self.num_vertices,
+    def _tcd(self, alive, ts, te, k, h, wt: Optional[WindowTEL] = None):
+        tel = self.tel if wt is None else wt.tel
+        nv = self.num_vertices if wt is None else wt.num_vertices
+        return tcd_mod.tcd(tel, alive, ts, te, k, h, num_vertices=nv,
                            degree_fn=self._degree_fn)
-
-    def _tcd_batch(self, alive, ts, te, k, h):
-        return tcd_mod.tcd_batch(self.tel, alive, ts, te, k, h,
-                                 num_vertices=self.num_vertices,
-                                 degree_fn=self._degree_fn)
 
     # ------------------------------------------------------------------ query
     def query(self, k: int, Ts: int, Te: int, *, h: int = 1,
@@ -165,18 +308,22 @@ class TCQEngine:
         """All distinct temporal k-cores over subintervals of [Ts, Te].
 
         algorithm: "otcd" (TTI pruning, §4) or "tcd" (full enumeration, §3).
-        mode: "serial" (paper-faithful), "wave" (device-resident lane pool
-        — up to ``wave`` schedule cells per fused device step, ``depth``
-        steps in flight), or "wave_stepwise" (the seed batched engine,
-        kept as the benchmark baseline).
+        mode: "serial" (paper-faithful) or "wave" (device-resident lane
+        pool — up to ``wave`` schedule cells per fused device step,
+        ``depth`` steps in flight).
         wave: lane count for wave mode, or "auto" to pick it from the
-        vertex count and the windowed edge count (scheduler.autotune_wave).
+        vertex count, the windowed edge count and the ring depth
+        (scheduler.autotune_wave).
         depth: slot-ring depth D for wave mode (pipelining; pruning seen
         by in-flight steps is up to D-1 steps stale, still exact).
         h: link-strength lower bound (paper §6.2); 1 = plain TCQ.
         min_span/max_span: time-span constraint (paper §6.2), applied on the
         fly; pruning stays exact because it is TTI-based.
         """
+        if mode not in ("serial", "wave"):
+            raise ValueError(
+                f"unknown mode {mode!r}: expected 'serial' or 'wave' (the "
+                "seed 'wave_stepwise' baseline was retired after PR 2)")
         t0 = time.perf_counter()
         uts = self.graph.unique_ts
         uts = uts[(uts >= Ts) & (uts <= Te)].astype(np.int64)
@@ -186,24 +333,19 @@ class TCQEngine:
             return TCQResult([], stats)
         prune = algorithm == "otcd"
         if mode == "wave" and self._degree_fn is not None:
-            # custom degree semantics are only plumbed through the
-            # scalar/vmapped TCD path; run the stepwise engine (which
-            # honors degree_fn) rather than silently ignoring the override
-            mode = "wave_stepwise"
+            # custom degree semantics are only plumbed through the scalar
+            # TCD path; run serial (which honors degree_fn) rather than
+            # silently ignoring the override
+            mode = "serial"
         if mode == "wave":
-            tel_w, seg_pair_w, e_w = self._window_tel(int(uts[0]),
-                                                      int(uts[-1]))
-            stats.window_edges = e_w
+            wt = self._window_tel(int(uts[0]), int(uts[-1]))
+            stats.window_edges = wt.window_edges
             if wave == "auto":
-                wave = autotune_wave(self.num_vertices, e_w)
-            pipe = WavePipeline(tel_w, self.num_vertices,
-                                seg_pair_w, self._seg_vert, wave, depth)
+                wave = autotune_wave(wt.num_vertices, wt.window_edges,
+                                     depth=depth)
+            pipe = WavePipeline(wt.tel, wt.num_vertices,
+                                wt.seg_pair, wt.seg_vert, wave, depth)
             cores = pipe.run(uts, k, h, prune, stats)
-        elif mode == "wave_stepwise":
-            stats.window_edges = self.graph.num_edges
-            cores = self._run_wave_stepwise(uts, k, h, prune,
-                                            8 if wave == "auto" else wave,
-                                            stats)
         elif self._degree_fn is not None:
             # custom degree fns are written against the graph's real TEL
             # layout — never hand them the bucket-padded window truncation
@@ -212,9 +354,9 @@ class TCQEngine:
         else:
             # serial peels against the same windowed TEL as wave mode:
             # per-cell work scales with the window's edges, not |E|
-            tel_w, _, e_w = self._window_tel(int(uts[0]), int(uts[-1]))
-            stats.window_edges = e_w
-            cores = self._run_serial(uts, k, h, prune, stats, tel_w)
+            wt = self._window_tel(int(uts[0]), int(uts[-1]))
+            stats.window_edges = wt.window_edges
+            cores = self._run_serial(uts, k, h, prune, stats, wt)
         out = list(cores.values())
         stats.wall_time_s = time.perf_counter() - t0
         res = TCQResult(out, stats)
@@ -243,7 +385,10 @@ class TCQEngine:
         (a serving hot set): per-iteration peel cost scales with the
         *union* window's edges, so batching a few narrow windows from
         opposite ends of a long timeline can cost more than looping
-        ``query()`` (group such requests into separate batches).
+        ``query()``.  The streaming :class:`~repro.core.service.TCQService`
+        automates exactly that grouping (window-clustered pools with
+        mid-flight admission); this method remains the single-pool,
+        fixed-batch entry point.
 
         Per-query ``QueryStats`` carry that query's schedule counters;
         pipeline counters (device_steps, host_syncs, occupancy, ...)
@@ -251,7 +396,7 @@ class TCQEngine:
         :class:`~repro.core.results.QueryStats`).
 
         wave: lane count, or "auto" (default) — autotuned from the vertex
-        count, the union window's edge count, and the batch size.
+        count, the union window's edge count, the batch size and depth.
         depth: slot-ring depth D (D steps in flight).
         """
         t0 = time.perf_counter()
@@ -283,24 +428,19 @@ class TCQEngine:
         if states:
             lo = min(int(s.uts[0]) for _, s in states)
             hi = max(int(s.uts[-1]) for _, s in states)
-            tel_w, seg_pair_w, e_w = self._window_tel(lo, hi)
+            wt = self._window_tel(lo, hi)
             if wave == "auto":
-                wave = autotune_wave(self.num_vertices, e_w,
-                                     num_queries=len(states))
+                wave = autotune_wave(wt.num_vertices, wt.window_edges,
+                                     num_queries=len(states), depth=depth)
             pool_stats = QueryStats()
-            pipe = WavePipeline(tel_w, self.num_vertices, seg_pair_w,
-                                self._seg_vert, wave, depth)
+            pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
+                                wt.seg_vert, wave, depth)
             pipe.run_pool([s for _, s in states], pool_stats)
             for qi, s in states:
                 st = s.stats
-                st.window_edges = e_w
-                st.device_steps = pool_stats.device_steps
-                st.host_syncs = pool_stats.host_syncs
-                st.bytes_synced = pool_stats.bytes_synced
-                st.peel_iters = pool_stats.peel_iters
-                st.lane_refills = pool_stats.lane_refills
-                st.occupancy = pool_stats.occupancy
-                cores = s.decode_results(self.num_vertices)
+                st.absorb_pool(pool_stats, window_edges=wt.window_edges,
+                               batch_size=len(reqs))
+                cores = s.decode_results(wt.num_vertices)
                 outs[qi] = TCQResult(list(cores.values()), st)
         wall = time.perf_counter() - t0
         for out in outs:
@@ -309,11 +449,14 @@ class TCQEngine:
 
     # ----------------------------------------------------------- serial mode
     def _run_serial(self, uts, k, h, prune, stats,
-                    tel: Optional[DeviceTEL] = None):
+                    wt: Optional[WindowTEL] = None):
         n = uts.size
         idx_of = {int(t): i for i, t in enumerate(uts)}
         pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
         results: Dict[Tuple[int, int], CoreResult] = {}
+        ones = self._ones if wt is None or \
+            wt.num_vertices == self._ones.shape[0] \
+            else jnp.ones((wt.num_vertices,), dtype=bool)
         empty_col_max = -1          # cells (r, c<=bound) are provably empty
         row_alive = None            # warm start across rows (Theorem 1)
         row_alive_j = -1
@@ -334,8 +477,8 @@ class TCQEngine:
                 elif row_alive is not None and j <= row_alive_j:
                     warm = row_alive
                 else:
-                    warm = self._ones
-                res = self._tcd(warm, int(uts[i]), int(uts[j]), k, h, tel)
+                    warm = ones
+                res = self._tcd(warm, int(uts[i]), int(uts[j]), k, h, wt)
                 stats.cells_evaluated += 1
                 stats.device_steps += 1
                 if int(res.n_edges) == 0:
@@ -371,118 +514,6 @@ class TCQEngine:
                     j = (b_idx - 1) if b_idx < j else j - 1
                 else:
                     j = j - 1
-        return results
-
-    # ------------------------------------------- stepwise wave (seed baseline)
-    def _run_wave_stepwise(self, uts, k, h, prune, wave, stats):
-        """Seed batched engine: up to ``wave`` cells per device step, with a
-        blocking host round-trip between steps and per-core [V] bool
-        transfers.  Retained as the measured baseline for the pipelined
-        engine (see engine.WavePipeline and benchmarks/bench_pipeline.py).
-
-        Rows advance concurrently; pruning triggered by any lane applies to
-        all not-yet-evaluated cells (lanes already in flight may compute a
-        duplicate — counted, and removed by TTI dedup per Property 2).
-        """
-        n = uts.size
-        idx_of = {int(t): i for i, t in enumerate(uts)}
-        results: Dict[Tuple[int, int], CoreResult] = {}
-        pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
-        # empty cells form a staircase: cell (i_e, j_e) empty => all
-        # (r>=i_e, c<=j_e) empty.  Wave mode needs the row condition
-        # explicitly (rows are concurrent, unlike the ascending serial
-        # sweep); the incremental corner list is shared with the pipeline
-        # via scheduler.EmptyStaircase.
-        empty = EmptyStaircase()
-        best_init = None  # (row, col, alive) of a completed row-initial cell
-
-        class Row:
-            __slots__ = ("i", "j", "alive", "first")
-
-            def __init__(self, i):
-                self.i, self.j, self.alive, self.first = i, n - 1, None, True
-
-        pending = deque(range(n))
-        active: List[Row] = []
-
-        def advance(row: Row) -> bool:
-            """Move cursor past pruned/empty cells; False when row exhausted."""
-            j = pruned[row.i].highest_uncovered_leq(row.j)
-            if j is None or j < row.i or j <= empty.bound(row.i):
-                return False
-            row.j = j
-            return True
-
-        while pending or active:
-            while len(active) < wave and pending:
-                r = Row(pending.popleft())
-                if advance(r):
-                    active.append(r)
-            if not active:
-                break
-            # assemble one fixed-width batch (pad with dead lanes)
-            lanes = list(active)
-            alive_stack, ts_arr, te_arr = [], [], []
-            for r in lanes:
-                if r.alive is not None:
-                    warm = r.alive
-                elif (best_init is not None and best_init[0] <= r.i
-                      and best_init[1] >= r.j):
-                    warm = best_init[2]
-                else:
-                    warm = self._ones
-                alive_stack.append(warm)
-                ts_arr.append(int(uts[r.i]))
-                te_arr.append(int(uts[r.j]))
-            pad = wave - len(lanes)
-            for _ in range(pad):
-                alive_stack.append(jnp.zeros_like(self._ones))
-                ts_arr.append(0)
-                te_arr.append(-1)
-            res = self._tcd_batch(
-                jnp.stack(alive_stack),
-                jnp.asarray(ts_arr, dtype=jnp.int32),
-                jnp.asarray(te_arr, dtype=jnp.int32), k, h)
-            stats.device_steps += 1
-            stats.cells_evaluated += len(lanes)
-            n_edges = np.asarray(res.n_edges)
-            tti_lo = np.asarray(res.tti_lo)
-            tti_hi = np.asarray(res.tti_hi)
-            stats.host_syncs += 3
-            stats.bytes_synced += n_edges.nbytes + tti_lo.nbytes + tti_hi.nbytes
-            survivors: List[Row] = []
-            for li, row in enumerate(lanes):
-                i, j = row.i, row.j
-                if int(n_edges[li]) == 0:
-                    empty.add(i, j)
-                    continue  # row exhausted: all deeper cells empty
-                row.alive = res.alive[li]
-                a_idx = idx_of[int(tti_lo[li])]
-                b_idx = idx_of[int(tti_hi[li])]
-                one = tcd_mod.TCDResult(res.alive[li], tti_lo[li], tti_hi[li],
-                                        n_edges[li], res.n_verts[li])
-                self._collect(results, one, a_idx, b_idx, uts, k, stats)
-                if row.first and (best_init is None or j >= best_init[1]):
-                    best_init = (i, j, res.alive[li])
-                row.first = False
-                if prune:
-                    if b_idx < j:
-                        stats.por_triggers += 1
-                        stats.pruned_por += pruned[i].add(b_idx, j - 1)
-                    if a_idx > i:
-                        stats.pou_triggers += 1
-                        for r2 in range(i + 1, a_idx + 1):
-                            stats.pruned_pou += pruned[r2].add(r2, j)
-                    if a_idx > i and b_idx < j:
-                        stats.pol_triggers += 1
-                        for r2 in range(a_idx + 1, b_idx + 1):
-                            stats.pruned_pol += pruned[r2].add(b_idx + 1, j)
-                    row.j = (b_idx - 1) if b_idx < j else j - 1
-                else:
-                    row.j = j - 1
-                if advance(row):
-                    survivors.append(row)
-            active = survivors
         return results
 
     # ---------------------------------------------------------------- collect

@@ -62,11 +62,27 @@ class QueryStats:
     host_syncs: int = 0           # blocking device->host sync points
     bytes_synced: int = 0         # total device->host result payload
     lane_refills: int = 0         # in-place lane buffer refills (wave mode)
+    admissions: int = 0           # queries admitted mid-flight (live pool)
     peel_iters: int = 0           # shared fixpoint iterations (wave mode)
     window_edges: int = 0         # edges in the windowed TEL actually peeled
     occupancy: float = 0.0        # mean occupied lanes per device step (wave)
     batch_size: int = 0           # queries sharing the pipeline (query_batch)
     wall_time_s: float = 0.0
+
+    def absorb_pool(self, pool_stats: "QueryStats", *, window_edges: int,
+                    batch_size: int) -> None:
+        """Copy the shared lane pool's device-side counters onto one
+        member query's stats (used by ``query_batch`` and the streaming
+        service — the single place the pool->member field list lives)."""
+        self.window_edges = window_edges
+        self.batch_size = batch_size
+        self.device_steps = pool_stats.device_steps
+        self.host_syncs = pool_stats.host_syncs
+        self.bytes_synced = pool_stats.bytes_synced
+        self.peel_iters = pool_stats.peel_iters
+        self.lane_refills = pool_stats.lane_refills
+        self.admissions = pool_stats.admissions
+        self.occupancy = pool_stats.occupancy
 
     @property
     def pruned_total(self) -> int:

@@ -234,21 +234,26 @@ _W_MIN, _W_MAX = 4, 64
 
 
 def autotune_wave(num_vertices: int, window_edges: int,
-                  num_queries: int = 1) -> int:
+                  num_queries: int = 1, depth: int = 2) -> int:
     """Pick the lane count W for a (batch of) wave queries.
 
     One fixpoint iteration touches O(W * (E_w + V)) active elements (edge
-    activity + degrees per lane), so W is sized to keep a step's working
-    set near ``_LANE_ELEM_BUDGET`` — large enough to amortize per-step
-    dispatch/sync overhead, small enough to stay cache/VMEM-resident and
-    to bound the waste of the shared fixpoint loop (every lane runs until
-    the slowest converges).  Demand caps supply: a single query rarely
-    keeps more than ~8 lanes full (schedule tails drain), so W also scales
-    with how many queries the pool serves.  Result is a power of two in
-    [4, 64] so lane-buffer shapes (and compiled programs) are reused.
+    activity + degrees per lane), so W is sized to keep the pipeline's
+    *in-flight* working set near ``_LANE_ELEM_BUDGET`` — large enough to
+    amortize per-step dispatch/sync overhead, small enough to stay
+    cache/VMEM-resident and to bound the waste of the shared fixpoint loop
+    (every lane runs until the slowest converges).  The slot ring keeps
+    ``depth`` lane buffers in flight at once (D·W lanes of live state),
+    so the supply bound scales as 1/depth — the budget is calibrated at
+    the default depth of 2, and deeper rings shrink W instead of
+    overshooting the element budget.  Demand caps supply: a single query
+    rarely keeps more than ~8 lanes full (schedule tails drain), so W
+    also scales with how many queries the pool serves.  Result is a power
+    of two in [4, 64] so lane-buffer shapes (and compiled programs) are
+    reused.
     """
     per_lane = max(1, int(num_vertices) + int(window_edges))
-    supply = max(1, _LANE_ELEM_BUDGET // per_lane)
+    supply = max(1, (2 * _LANE_ELEM_BUDGET) // (per_lane * max(1, int(depth))))
     demand = _LANES_PER_QUERY * max(1, int(num_queries))
     w = max(_W_MIN, min(_W_MAX, supply, demand))
     return 1 << (w.bit_length() - 1)            # round down to a power of two

@@ -1,0 +1,364 @@
+"""Streaming TCQ service runtime: continuous query traffic over a living
+temporal graph.
+
+``TCQEngine.query_batch`` answers a *fixed* request set behind a drain
+barrier — admit, run, return.  A serving system sees neither fixed sets
+nor a frozen graph: requests arrive while earlier ones are still peeling,
+and `EdgeStream.push` batches land between (and during) waves.  This
+module owns that continuous loop:
+
+* **Tickets and epoch pinning** — :meth:`TCQService.submit` stamps each
+  request with the engine epoch *and the graph snapshot* current at
+  admission.  Snapshots are immutable (``add_edges`` returns a new
+  ``TemporalGraph``), so pinning is a reference, not a copy; a query
+  admitted at epoch e is answered exactly over epoch e's edges no matter
+  how many ingestion batches land while it runs (snapshot consistency —
+  results are bit-identical to querying the pinned snapshot alone).
+
+* **Window-clustered lane pools** — co-admitted requests are grouped by
+  window overlap (:func:`cluster_windows`), and each cluster peels
+  against a TEL truncated to *its own* union window instead of one
+  bloated global union.  Disjoint far-apart windows — the worst case for
+  ``query_batch``'s single union TEL, whose per-iteration peel cost
+  scales with the union's edge count — become separate tight pools.
+
+* **Mid-flight admission** — each pool runs through
+  ``WavePipeline.run_pool(..., admit=...)``: whenever lanes free up, the
+  service's admit hook (optionally after polling the driver for new
+  arrivals/ingestion) admits every pending ticket whose epoch matches
+  the pool and whose window fits inside the pool's TEL.  Lanes freed by
+  a draining query's tail are refilled by *newly arrived* queries with
+  no barrier in between; tickets that don't fit the live pool are served
+  by the next ``pump``.
+
+The driver loop is deliberately synchronous and single-device (the
+repo's serving story is one engine per accelerator); ``poll`` callbacks
+are the seam where a real frontend — or the open-loop benchmark drivers
+in ``launch/serve.py`` / ``benchmarks/bench_streaming.py`` — injects
+arrivals and edge ingestion mid-flight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import TemporalGraph
+from repro.core.otcd import TCQEngine
+from repro.core.results import QueryStats, TCQResult
+from repro.core.scheduler import QueryState, autotune_wave
+from repro.core.engine import WavePipeline
+
+
+# ---------------------------------------------------------------- clustering
+def cluster_windows(windows: Sequence[Tuple[int, int]],
+                    gap: int = 0) -> List[List[int]]:
+    """Group window indices by overlap (union-find via interval sweep).
+
+    Windows whose intervals overlap — or sit within ``gap`` of each other
+    — land in one cluster; the result is a partition of ``range(len)``
+    ordered by cluster start.  O(n log n).  A cluster's union window is
+    exactly the union of its members, so each cluster's TEL truncation
+    is tight: no member pays for edges only another cluster needs.
+    """
+    if not windows:
+        return []
+    order = sorted(range(len(windows)), key=lambda i: windows[i])
+    clusters: List[List[int]] = [[order[0]]]
+    hi = windows[order[0]][1]
+    for i in order[1:]:
+        lo_i, hi_i = windows[i]
+        if lo_i <= hi + gap:
+            clusters[-1].append(i)
+            hi = max(hi, hi_i)
+        else:
+            clusters.append([i])
+            hi = hi_i
+    return clusters
+
+
+# -------------------------------------------------------------------- ticket
+@dataclasses.dataclass
+class TCQTicket:
+    """One in-flight (or completed) service request.
+
+    ``epoch``/``graph`` pin the TEL snapshot current at admission: the
+    result is computed over exactly those edges, regardless of ingestion
+    that lands later.  ``uts`` is the snapshot's unique-timestamp slice
+    for the window (the schedule's column space), fixed at submit time.
+    """
+
+    id: int
+    k: int
+    h: int
+    ts: int
+    te: int
+    epoch: int
+    graph: TemporalGraph
+    uts: np.ndarray
+    submit_s: float
+    admit_s: Optional[float] = None
+    done_s: Optional[float] = None
+    result: Optional[TCQResult] = None
+    state: Optional[QueryState] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit-to-completion latency (the serving metric)."""
+        if self.done_s is None:
+            return None
+        return self.done_s - self.submit_s
+
+    @property
+    def window(self) -> Tuple[int, int]:
+        """Schedule-tight window: the snapshot timestamps actually swept."""
+        return int(self.uts[0]), int(self.uts[-1])
+
+
+# ------------------------------------------------------------------- service
+class TCQService:
+    """Continuous multi-tenant TCQ serving over a streaming graph.
+
+    Parameters
+    ----------
+    graph:
+        Initial snapshot (or pass ``engine=`` to wrap an existing one).
+    wave:
+        Lane count per pool, or ``"auto"`` (default) — autotuned per pool
+        from the cluster's union-window edge count, member count and ring
+        depth.
+    depth:
+        Slot-ring depth D of each pool's pipeline.
+    cluster_gap:
+        Two windows whose gap is <= this many time units still share a
+        cluster (0 = pure overlap).  Small positive values trade a
+        slightly looser TEL for fewer, fuller pools.
+
+    Usage::
+
+        svc = TCQService(graph)
+        t1 = svc.submit({"k": 3, "ts": 10, "te": 500})
+        svc.push_edges(u, v, t)                  # new epoch; t1 unaffected
+        t2 = svc.submit({"k": 2, "ts": 40, "te": 90})   # sees new edges
+        svc.run_until_idle()
+        t1.result, t1.latency_s
+
+    ``pump(poll=...)`` serves one cluster-pool; ``poll`` is invoked
+    between waves (whenever lanes free) so the driver can submit new
+    requests or push edges *mid-flight* — compatible arrivals join the
+    running pool immediately.
+    """
+
+    def __init__(self, graph: Optional[TemporalGraph] = None, *,
+                 engine: Optional[TCQEngine] = None,
+                 wave="auto", depth: int = 2, cluster_gap: int = 0,
+                 use_kernel: Optional[bool] = None,
+                 retain_snapshots: bool = True):
+        if engine is None:
+            if graph is None:
+                raise ValueError("need a graph or an engine")
+            engine = TCQEngine(graph, use_kernel=use_kernel)
+        self.engine = engine
+        self.wave = wave
+        self.depth = int(depth)
+        self.cluster_gap = int(cluster_gap)
+        # False drops each ticket's pinned graph reference once it
+        # completes, so a long-running service does not hold one O(E)
+        # snapshot per epoch alive through its history (the driver owns
+        # trimming ``completed``/``pool_log`` themselves)
+        self.retain_snapshots = bool(retain_snapshots)
+        self._pending: Deque[TCQTicket] = deque()
+        self._fresh: List[TCQTicket] = []   # resolved-at-submit tickets
+        self.completed: List[TCQTicket] = []
+        self._next_id = 0
+        self.pool_log: List[Dict] = []      # one record per pool run
+
+    # ------------------------------------------------------------- ingestion
+    @property
+    def epoch(self) -> int:
+        return self.engine.epoch
+
+    @property
+    def graph(self) -> TemporalGraph:
+        return self.engine.graph
+
+    def push_edges(self, u, v, t) -> int:
+        """Merge-append an arrival batch; returns the new epoch.  O(E+B)
+        host work; in-flight/pending tickets keep their pinned snapshot."""
+        g = self.engine.graph.add_edges(u, v, t)
+        if g is self.engine.graph:          # empty/self-loop-only batch
+            return self.engine.epoch
+        return self.engine.update_graph(g)
+
+    def ingest_graph(self, graph: TemporalGraph) -> int:
+        """Install an externally built snapshot (``EdgeStream`` subscriber
+        form: ``stream.subscribe(svc.ingest_graph)``)."""
+        return self.engine.update_graph(graph)
+
+    def connect(self, stream) -> None:
+        """Subscribe to an ``EdgeStream`` so pushes land as new epochs."""
+        stream.subscribe(self.ingest_graph)
+
+    # ------------------------------------------------------------ submission
+    def submit(self, request) -> TCQTicket:
+        """Admit one request; returns its ticket (resolved immediately for
+        windows containing no snapshot timestamps).
+
+        ``request`` is a mapping with ``k``, ``ts``, ``te`` and optional
+        ``h`` — the ``TCQRequestStream`` format.
+        """
+        r = dict(request)
+        now = time.perf_counter()
+        g = self.engine.graph
+        uts = g.unique_ts
+        uts = uts[(uts >= int(r["ts"])) & (uts <= int(r["te"]))]
+        uts = uts.astype(np.int64)
+        tk = TCQTicket(id=self._next_id, k=int(r["k"]),
+                       h=int(r.get("h", 1)), ts=int(r["ts"]),
+                       te=int(r["te"]), epoch=self.engine.epoch, graph=g,
+                       uts=uts, submit_s=now)
+        self._next_id += 1
+        n = int(uts.size)
+        if n == 0:
+            tk.result = TCQResult([], QueryStats(n_timestamps=0))
+            tk.admit_s = tk.done_s = now
+            tk.result.stats.wall_time_s = 0.0
+            self._retire(tk)
+            self._fresh.append(tk)      # handed back by the next pump()
+            return tk
+        self._pending.append(tk)
+        return tk
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # --------------------------------------------------------------- serving
+    def _make_state(self, tk: TCQTicket) -> QueryState:
+        n = int(tk.uts.size)
+        stats = QueryStats(n_timestamps=n, cells_total=n * (n + 1) // 2)
+        tk.state = QueryState(tk.uts, tk.k, tk.h, True, stats, qid=tk.id)
+        tk.admit_s = time.perf_counter()
+        return tk.state
+
+    def _retire(self, tk: TCQTicket) -> None:
+        """Bookkeeping for a ticket that just resolved."""
+        tk.state = None             # drop packed rows + pruning state
+        if not self.retain_snapshots:
+            tk.graph = None
+        self.completed.append(tk)
+
+    def _finalize(self, tk: TCQTicket, num_vertices: int,
+                  done_s: float) -> None:
+        cores = tk.state.decode_results(num_vertices)
+        st = tk.state.stats
+        tk.result = TCQResult(list(cores.values()), st)
+        tk.done_s = done_s
+        st.wall_time_s = done_s - tk.submit_s
+        self._retire(tk)
+
+    def pump(self, poll: Optional[Callable[["TCQService"], None]] = None
+             ) -> List[TCQTicket]:
+        """Serve one window-clustered pool to completion; returns every
+        ticket resolved along the way (including requests resolved at
+        submit time for empty windows).  ``poll`` is called before pool
+        formation and again every time lanes free up, so the driver can
+        inject arrivals and ingestion mid-flight; arrivals that match
+        the live pool's epoch and fit its union window are admitted into
+        it, the rest wait for the next pump.  Tickets resolve *as their
+        own schedule drains* — a query admitted early is not held open
+        by queries admitted after it, so per-ticket latency is honest
+        even when sustained arrivals keep one pool alive.  Returns []
+        when nothing resolved and nothing is pending.
+        """
+        if poll is not None:
+            poll(self)
+        if not self._pending:
+            fresh, self._fresh = self._fresh, []
+            return fresh
+        # head-of-line epoch first: older snapshots drain before newer
+        # ones so pinned epochs (and their cached TELs) retire quickly
+        head = self._pending[0]
+        epoch = head.epoch
+        cand = [tk for tk in self._pending if tk.epoch == epoch]
+        clusters = cluster_windows([tk.window for tk in cand],
+                                   self.cluster_gap)
+        members = next(
+            [cand[i] for i in c] for c in clusters
+            if any(cand[i] is head for i in c))
+        for tk in members:
+            self._pending.remove(tk)
+        pool_lo = min(tk.window[0] for tk in members)
+        pool_hi = max(tk.window[1] for tk in members)
+        wt = self.engine._window_tel(pool_lo, pool_hi,
+                                     graph=head.graph, epoch=epoch)
+        wave = self.wave
+        if wave == "auto":
+            wave = autotune_wave(wt.num_vertices, wt.window_edges,
+                                 num_queries=len(members), depth=self.depth)
+        pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
+                            wt.seg_vert, wave, self.depth)
+        states = [self._make_state(tk) for tk in members]
+        pool_stats = QueryStats()
+        t0 = time.perf_counter()
+
+        def admit() -> List[QueryState]:
+            if poll is not None:
+                poll(self)
+            # resolve members whose own schedule has fully drained —
+            # their latency must not absorb later admissions' work
+            now = time.perf_counter()
+            for tk in members:
+                if not tk.done and tk.state.done:
+                    self._finalize(tk, wt.num_vertices, now)
+            newly = []
+            for tk in list(self._pending):
+                if (tk.epoch == epoch and tk.window[0] >= pool_lo
+                        and tk.window[1] <= pool_hi):
+                    self._pending.remove(tk)
+                    members.append(tk)
+                    newly.append(self._make_state(tk))
+            return newly
+
+        pipe.run_pool(states, pool_stats, admit=admit)
+        done_s = time.perf_counter()
+        for tk in members:
+            if not tk.done:
+                self._finalize(tk, wt.num_vertices, done_s)
+            # pool-wide counters land once the pool's totals are known
+            # (the stats object is shared with the ticket's TCQResult)
+            tk.result.stats.absorb_pool(pool_stats,
+                                        window_edges=wt.window_edges,
+                                        batch_size=len(members))
+        fresh, self._fresh = self._fresh, []
+        self.pool_log.append({
+            "epoch": epoch, "window": (pool_lo, pool_hi),
+            "members": len(members), "wave": wave,
+            "admitted_midflight": pool_stats.admissions,
+            "window_edges": wt.window_edges,
+            "device_steps": pool_stats.device_steps,
+            "occupancy": pool_stats.occupancy,
+            "wall_s": done_s - t0,
+        })
+        return members + fresh
+
+    def run_until_idle(self, poll: Optional[Callable] = None
+                       ) -> List[TCQTicket]:
+        """Pump until no work is pending and ``poll`` (if any) stops
+        producing new arrivals; returns every ticket resolved along the
+        way (mid-flight admissions and resolved-at-submit empty windows
+        included)."""
+        served: List[TCQTicket] = []
+        while True:
+            out = self.pump(poll)
+            served.extend(out)
+            if not out and not self._pending:
+                return served

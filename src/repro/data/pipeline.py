@@ -71,3 +71,17 @@ class TCQRequestStream:
             ts = int(self.t_min + rng.integers(0, span_total))
             yield {"id": start + i, "k": self.k, "ts": ts,
                    "te": ts + self.span}
+
+    def open_loop(self, n: int, qps: float, start: int = 0):
+        """Open-loop arrival process: the same request stream, each tagged
+        with an ``arrive_s`` offset (seconds from t=0) drawn from a seeded
+        exponential inter-arrival at rate ``qps`` — the serving driver
+        submits a request once its wall clock passes ``arrive_s``,
+        independent of service completions (so queueing is visible)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, start, 1]))
+        clock = 0.0
+        for r in self.requests(n, start):
+            clock += float(rng.exponential(1.0 / max(qps, 1e-9)))
+            r["arrive_s"] = clock
+            yield r

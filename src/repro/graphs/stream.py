@@ -1,9 +1,12 @@
 """Dynamic-graph feed (paper §6.1): batched edge arrival over an ArrayTEL.
 
 The paper appends single edges to its linked-list TEL in O(1).  The array
-equivalent is a stream of timestamp-ordered batches; each batch triggers an
-amortized rebuild (`TemporalGraph.add_edges`) and invalidates downstream
-device TELs, which the serving driver refreshes between query waves.
+equivalent is a stream of timestamp-ordered batches; each ``push`` is an
+incremental sorted-run merge-append (`TemporalGraph.add_edges`,
+O(E + B log B)) producing a *new epoch* — an immutable snapshot.  In-flight
+queries pinned to an older epoch keep their snapshot; subscribers (the
+streaming ``TCQService`` / ``TCQEngine.update_graph``) install the new
+epoch for everything admitted afterwards.
 """
 
 from __future__ import annotations
@@ -27,6 +30,8 @@ class EdgeStream:
         self._subscribers.append(fn)
 
     def push(self, u, v, t) -> TemporalGraph:
+        """Merge-append one arrival batch; notify subscribers of the new
+        epoch.  Returns the new snapshot (the old one stays valid)."""
         self.graph = self.graph.add_edges(u, v, t)
         for fn in self._subscribers:
             fn(self.graph)

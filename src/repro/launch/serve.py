@@ -1,8 +1,21 @@
-"""TCQ serving launcher: the paper's system answering batched time-range
-k-core queries, optionally on a distributed (shard_map) engine.
+"""TCQ serving launcher: the paper's system as a *streaming service* —
+open-loop query arrivals over a temporal graph that keeps growing while
+queries run, served by ``TCQService`` (window-clustered lane pools,
+mid-flight admission, epoch-pinned snapshots).
 
     PYTHONPATH=src python -m repro.launch.serve --vertices 2000 \
-        --edges 30000 --requests 16 [--distributed] [--combine rs_ag]
+        --edges 30000 --requests 16 --qps 4 [--ingest-batches 4] \
+        [--distributed] [--combine rs_ag]
+
+The driver is open-loop: request arrival times come from a seeded
+exponential inter-arrival process at ``--qps`` and are injected by the
+service's ``poll`` hook whenever lanes free up — arrivals during a pool
+run are admitted mid-flight when their window fits, otherwise they queue
+for the next pool.  Edge ingestion batches land on their own schedule
+(between arrivals), each producing a new TEL epoch; queries always
+answer over the snapshot current at their admission.  Reported: p50 /
+p95 / p99 submit-to-completion latency, sustained qps, mean pool
+occupancy, and the epoch count ingested while serving.
 """
 
 from __future__ import annotations
@@ -13,36 +26,95 @@ import time
 import numpy as np
 
 
+def serve_stream(graph, requests, *, qps: float, ingest=None,
+                 wave="auto", depth: int = 2, cluster_gap: int = 0,
+                 warm: bool = True):
+    """Drive a TCQService with an open-loop arrival schedule.
+
+    ``requests`` is a list of dicts with an ``arrive_s`` offset
+    (``TCQRequestStream.open_loop`` format); ``ingest`` is an optional
+    iterator of (u, v, t) arrival batches pushed one per poll interval.
+    Returns (service, served tickets, wall seconds).
+    """
+    from repro.core import TCQService
+
+    # retain_snapshots=False: a long-lived server must not keep one O(E)
+    # graph snapshot alive per ingested epoch through its ticket history
+    svc = TCQService(graph, wave=wave, depth=depth, cluster_gap=cluster_gap,
+                     retain_snapshots=False)
+    if warm and requests:
+        # warm the compile caches so latency percentiles measure the
+        # steady state, not first-shape compilation
+        r0 = requests[0]
+        svc.submit({k: r0[k] for k in ("k", "ts", "te")})
+        svc.run_until_idle()
+        svc.completed.clear()
+        svc.pool_log.clear()
+    queue = sorted(requests, key=lambda r: r["arrive_s"])
+    ingest = iter(ingest) if ingest is not None else None
+    state = {"i": 0, "epochs": 0, "t0": time.perf_counter()}
+
+    def poll(s):
+        now = time.perf_counter() - state["t0"]
+        while state["i"] < len(queue) and queue[state["i"]]["arrive_s"] <= now:
+            s.submit(queue[state["i"]])
+            state["i"] += 1
+        if ingest is not None and state["epochs"] < state["i"]:
+            # one ingestion batch per served arrival tranche: edges land
+            # continuously while queries are in flight
+            try:
+                u, v, t = next(ingest)
+                s.push_edges(u, v, t)
+                state["epochs"] += 1
+            except StopIteration:
+                pass
+
+    served = []
+    while state["i"] < len(queue) or svc.pending:
+        out = svc.run_until_idle(poll)
+        served.extend(out)
+        if state["i"] < len(queue):
+            # idle before the next arrival: sleep to its arrival time
+            nxt = queue[state["i"]]["arrive_s"] - (
+                time.perf_counter() - state["t0"])
+            if nxt > 0:
+                time.sleep(min(nxt, 0.05))
+    wall = time.perf_counter() - state["t0"]
+    return svc, served, wall
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--vertices", type=int, default=2_000)
     ap.add_argument("--edges", type=int, default=30_000)
     ap.add_argument("--span", type=int, default=16_384)
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--qps", type=float, default=4.0,
+                    help="open-loop arrival rate (requests/sec)")
     ap.add_argument("--k", type=int, default=3)
-    ap.add_argument("--wave", type=int, default=8)
+    ap.add_argument("--wave", default="auto")
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--ingest-batches", type=int, default=4,
+                    help="edge arrival batches streamed during serving")
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map engine on the local host mesh")
     ap.add_argument("--combine", default="rs_ag",
                     choices=["psum", "rs_ag"])
     args = ap.parse_args()
 
-    from repro.core import TCQEngine
     from repro.data import TCQRequestStream
-    from repro.graphs import powerlaw_temporal
+    from repro.graphs import EdgeStream, powerlaw_temporal
 
     g = powerlaw_temporal(args.vertices, args.edges, args.span, seed=3)
     lo, hi = g.span
-    reqs = list(TCQRequestStream(lo, hi, k=args.k,
-                                 span=max(64, args.span // 20),
-                                 seed=0).requests(args.requests))
 
     if args.distributed:
-        import jax
-
         from repro.core.distributed import DistributedTCQ
         from repro.launch.mesh import make_host_mesh
 
+        reqs = list(TCQRequestStream(lo, hi, k=args.k,
+                                     span=max(64, args.span // 20),
+                                     seed=0).requests(args.requests))
         mesh = make_host_mesh()
         eng = DistributedTCQ(g, mesh, combine=args.combine)
         t0 = time.perf_counter()
@@ -58,17 +130,33 @@ def main():
               f"{dt:.3f}s ({int(iters)} peel iterations)")
         return
 
-    eng = TCQEngine(g)
-    lat = []
-    for r in reqs:
-        t0 = time.perf_counter()
-        res = eng.query(r["k"], r["ts"], r["te"], mode="wave",
-                        wave=args.wave)
-        lat.append(time.perf_counter() - t0)
-        print(f"req#{r['id']:03d} window=[{r['ts']},{r['te']}] -> "
-              f"{len(res)} distinct cores")
-    print(f"[serve] {len(reqs)} requests, mean {np.mean(lat)*1e3:.1f} ms, "
-          f"p95 {np.quantile(lat, 0.95)*1e3:.1f} ms")
+    reqs = list(TCQRequestStream(lo, hi, k=args.k,
+                                 span=max(64, args.span // 20),
+                                 seed=0).open_loop(args.requests, args.qps))
+    future = powerlaw_temporal(args.vertices, max(args.edges // 8, 64),
+                               args.span // 4, seed=5)
+    arrivals = ((u, v, t + hi) for u, v, t in
+                EdgeStream.replay(future, max(1, args.ingest_batches)))
+
+    wave = args.wave if args.wave == "auto" else int(args.wave)
+    svc, served, wall = serve_stream(g, reqs, qps=args.qps, ingest=arrivals,
+                                     wave=wave, depth=args.depth)
+    lat = np.array([tk.latency_s for tk in served])
+    occ = [p["occupancy"] for p in svc.pool_log if p["device_steps"]]
+    mid = sum(p["admitted_midflight"] for p in svc.pool_log)
+    for tk in sorted(served, key=lambda tk: tk.id)[:8]:
+        print(f"req#{tk.id:03d} k={tk.k} window=[{tk.ts},{tk.te}] "
+              f"epoch={tk.epoch} -> {len(tk.result)} cores "
+              f"({1e3 * tk.latency_s:.1f} ms)")
+    print(f"\n[serve] {len(served)} requests in {wall:.2f}s "
+          f"({len(served) / wall:.2f} qps sustained, target {args.qps}) "
+          f"over {svc.epoch} ingested epochs")
+    print(f"[serve] latency p50 {1e3 * np.quantile(lat, .5):.1f} ms | "
+          f"p95 {1e3 * np.quantile(lat, .95):.1f} ms | "
+          f"p99 {1e3 * np.quantile(lat, .99):.1f} ms")
+    print(f"[serve] {len(svc.pool_log)} pools, "
+          f"mean occupancy {np.mean(occ) if occ else 0:.1f} cells/step, "
+          f"{mid} mid-flight admissions")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """Pipelined wave engine equivalence + packed-transfer round trips.
 
 Seeded (non-hypothesis) property matrix: the device-resident pipeline
-(mode="wave") and the stepwise seed engine (mode="wave_stepwise") must
-return *exactly* the serial engine's result set — same TTIs, same vertex
-sets, same edge counts — across random graphs × k × h × span × wave
-width.  Plus unit tests for the uint32 bitmask pack/unpack pair and the
+(mode="wave") must return *exactly* the serial engine's result set —
+same TTIs, same vertex sets, same edge counts — across random graphs ×
+k × h × span × wave width.  (The seed stepwise engine that used to sit
+between them was retired after PR 2; requesting it must fail loudly.)
+Plus unit tests for the uint32 bitmask pack/unpack pair and the
 distributed engine's packed result transfer.
 """
 
@@ -49,9 +50,14 @@ def test_wave_modes_equal_serial(seed, k, h, span, wave):
     eng = TCQEngine(g)
     serial = eng.query(k, Ts, Te, h=h)
     pipelined = eng.query(k, Ts, Te, h=h, mode="wave", wave=wave)
-    stepwise = eng.query(k, Ts, Te, h=h, mode="wave_stepwise", wave=wave)
     assert_same_results(serial, pipelined)
-    assert_same_results(serial, stepwise)
+
+
+def test_retired_stepwise_mode_raises():
+    g = random_graph(0)
+    Ts, Te = g.span
+    with pytest.raises(ValueError, match="wave_stepwise"):
+        TCQEngine(g).query(2, Ts, Te, mode="wave_stepwise")
 
 
 def test_wave_on_dense_planted_graph():
@@ -162,7 +168,7 @@ def test_all_negative_timestamps_match_oracle():
     Ts, Te = g.span
     oracle = brute_force_query(g, 2, Ts, Te)
     eng = TCQEngine(g)
-    for mode in ("serial", "wave", "wave_stepwise"):
+    for mode in ("serial", "wave"):
         kw = {} if mode == "serial" else {"mode": mode}
         res = eng.query(2, Ts, Te, **kw)
         assert set(c.tti for c in res.cores) == set(oracle.keys()), mode

@@ -110,8 +110,8 @@ def test_serial_mode_uses_windowed_tel():
     n_in_window, _ = g.window_counts(lo, hi)
     assert res.stats.window_edges == n_in_window < g.num_edges
     assert eng._win_cache       # truncation was built and cached
-    # and the truncated peel returns exactly the full-TEL wave results
-    assert_same(eng.query(2, lo, hi, mode="wave_stepwise"), res)
+    # and the truncated peel returns exactly the wave pipeline's results
+    assert_same(eng.query(2, lo, hi, mode="wave"), res)
 
 
 # ------------------------------------------------------------- LRU window
@@ -124,13 +124,13 @@ def test_window_cache_is_lru(monkeypatch):
     monkeypatch.setattr(otcd, "_WINDOW_CACHE_MAX", 2)
     eng.query(2, Ts, Te - 10)           # A
     eng.query(2, Ts, Te - 12)           # B
-    key_a = (Ts, Te - 10)
+    key_a = (eng.epoch, Ts, Te - 10)    # cache keys are epoch-qualified
     assert key_a in eng._win_cache
     eng.query(2, Ts, Te - 10)           # touch A -> back of the queue
     eng.query(2, Ts, Te - 14)           # C evicts B (least recent), not A
     assert key_a in eng._win_cache
-    assert (Ts, Te - 12) not in eng._win_cache
-    assert (Ts, Te - 14) in eng._win_cache
+    assert (eng.epoch, Ts, Te - 12) not in eng._win_cache
+    assert (eng.epoch, Ts, Te - 14) in eng._win_cache
 
 
 # ----------------------------------------------------------- EmptyStaircase
