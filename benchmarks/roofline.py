@@ -10,6 +10,8 @@ import os
 from typing import Dict, List
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+KERNEL = os.path.join(os.path.dirname(__file__), "results",
+                      "bench_kernel.json")
 
 _MOVES = {
     ("memory", "train"): "cut softmax/logit f32 traffic (flash-style "
@@ -61,6 +63,48 @@ def fmt_row(r: dict) -> str:
         rf=f"{frac:.4f}" if frac else "-")
 
 
+def wave_step_report() -> None:
+    """Fused wave-peel step as a fraction of peak (needs a prior
+    ``bench_wave.run_kernel()`` run for benchmarks/results/
+    bench_kernel.json).  Both lowerings are scored at TPU peaks — the
+    cost numbers describe the lowering, not the host they were derived
+    on — so the table answers "what fraction of the HBM roofline does
+    the step sustain", not "how fast was the interpreter"."""
+    if not os.path.exists(KERNEL):
+        return
+    with open(KERNEL) as f:
+        rows = json.load(f)
+    cost = next((r for r in rows if r.get("bench") == "fused_step_cost"),
+                None)
+    if cost is None:
+        return
+    from repro.launch.analysis import HBM_BW, PEAK_FLOPS
+
+    print(f"\nfused wave-peel step (graph={cost['graph']} W={cost['wave']} "
+          f"E={cost['num_edges']} iters={cost['iters']}):")
+    print("| lowering | bytes/step | flops/step | t_mem(s) | t_comp(s) | "
+          "bound | ai(flop/B) | frac_peak_flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for path in ("unfused", "fused"):
+        b = float(cost[f"{path}_bytes_step"])
+        fl = float(cost[f"{path}_flops_step"])
+        t_mem = b / HBM_BW
+        t_comp = fl / PEAK_FLOPS
+        t = max(t_mem, t_comp, 1e-30)
+        # both lowerings sit left of the machine-balance knee: the step
+        # runs AT the HBM roofline, so "fraction of peak" is the compute
+        # utilization that bound allows — raising arithmetic intensity
+        # (fewer HBM bytes per op, i.e. fusion) is what moves it
+        print(f"| {path} | {b:.3e} | {fl:.3e} | {t_mem:.2e} | "
+              f"{t_comp:.2e} | {'mem' if t_mem >= t_comp else 'comp'} | "
+              f"{fl / max(b, 1.0):.3f} | {t_comp / t:.3f} |")
+    ratio = float(cost["bytes_ratio"])
+    print(f"fused/unfused bytes per step: {ratio:.2e} "
+          f"(per-iteration HBM bytes: "
+          f"{float(cost['fused_bytes_per_iter_hbm']):.0f} fused vs "
+          f"{float(cost['unfused_bytes_per_iter']):.3e} unfused)")
+
+
 def main():
     recs = load()
     ok = [r for r in recs if not r.get("failed") and not r.get("skipped")]
@@ -97,6 +141,7 @@ def main():
         print(f"  {r['arch']} x {r['shape']} x {r['mesh']}"
               f"{'[' + r['combine'] + ']' if r.get('combine') else ''}: "
               f"t_coll={r['roofline']['t_collective_s']:.3f}s")
+    wave_step_report()
 
 
 if __name__ == "__main__":

@@ -2,10 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 full JSON records under benchmarks/results/.  The wave-engine rows
-(bench_wave + bench_pipeline + bench_service + bench_streaming) are
-additionally folded into the repo-root ``BENCH_wave.json`` so the
-wave-mode perf trajectory is tracked across PRs; bench_pipeline,
-bench_service and bench_streaming also verify cross-engine result
+(bench_wave + its fused-kernel gate run_kernel + bench_pipeline +
+bench_service + bench_streaming) are additionally folded into the
+repo-root ``BENCH_wave.json`` so the wave-mode perf trajectory is
+tracked across PRs; bench_wave.run_kernel raises on fused-vs-composite
+bit divergence or a fused-cost regression, and bench_pipeline,
+bench_service and bench_streaming verify cross-engine result
 equivalence (including the streaming snapshot-consistency gate) and
 raise (non-zero exit) on divergence, so the harness doubles as a
 regression gate.  With ``REPRO_BENCH_SMOKE=1`` only the gate benches run,
@@ -114,6 +116,28 @@ def main() -> None:
         traceback.print_exc()
 
     try:
+        # the fused wave-peel kernel gate: run_kernel() raises on any
+        # fused-vs-composite bit divergence and on a cost-model
+        # regression (fused bytes/step must stay strictly below the
+        # unfused chain), so a broken kernel fails the harness like a
+        # cross-engine result divergence would
+        krows = bench_wave.run_kernel()
+        trajectory["kernel"] = krows
+        for r in krows:
+            if r["bench"] == "fused_step":
+                row(f"kernel/{r['path']}", r["t_s"],
+                    f"iters={r['iters']} wave={r['wave']}")
+            else:
+                row("kernel/cost", 0.0,
+                    f"bytes_ratio={r['bytes_ratio']:.2e} "
+                    f"fused_B/step={r['fused_bytes_step']:.3e} "
+                    f"unfused_B/step={r['unfused_bytes_step']:.3e} "
+                    f"gate_ok={r['gate_ok']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
         prows = bench_pipeline.run()
         trajectory["pipeline"] = prows
         for r in prows:
@@ -174,7 +198,8 @@ def main() -> None:
     # write would clobber the last good cross-PR history (and smoke-sized
     # runs never overwrite the measured numbers)
     if not SMOKE and \
-            {"wave", "pipeline", "service", "streaming"} <= trajectory.keys():
+            {"wave", "kernel", "pipeline", "service",
+             "streaming"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

@@ -224,9 +224,21 @@ def wave_shardings(mesh, num_vertices: int, m: int):
 
 
 class DistributedTCQ:
-    """Runnable distributed engine (any mesh, incl. degenerate test meshes)."""
+    """Runnable distributed engine (any mesh, incl. degenerate test meshes).
 
-    def __init__(self, graph: TemporalGraph, mesh, combine: str = "rs_ag"):
+    On a single-device mesh the shard_map program degenerates to the
+    plain composite with collective no-ops, so the single-shard block
+    routes through ``core.wave.make_wave_step_fn`` instead — the fused
+    Pallas peel-to-fixpoint kernel on TPU, the XLA composite elsewhere
+    (``use_fused=False`` restores the pure shard_map path, e.g. for the
+    collective-lowering dry runs; ``True`` forces the kernel).  Multi-
+    device meshes always run the sharded step — the fused kernel owns
+    the *intra-shard* work and the model-axis degree combine stays a
+    collective.
+    """
+
+    def __init__(self, graph: TemporalGraph, mesh, combine: str = "rs_ag",
+                 *, use_fused: Optional[bool] = None):
         self.graph = graph
         self.mesh = mesh
         m = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
@@ -241,6 +253,13 @@ class DistributedTCQ:
             mesh, num_vertices=plan.num_vertices, combine=combine,
             p_s=plan.num_pairs_shard))
         self._sh = sh
+        self._fused = None
+        if mesh.devices.size == 1 and use_fused is not False:
+            from repro.core.wave import make_wave_step_fn
+
+            tel = graph.device_tel(vertex_capacity=plan.num_vertices)
+            self._fused = make_wave_step_fn(tel, plan.num_vertices,
+                                            use_kernel=use_fused)
 
     def query_wave(self, ts, te, k: int, h: int = 1, alive=None, *,
                    packed: bool = False):
@@ -253,6 +272,16 @@ class DistributedTCQ:
         v = self.plan.num_vertices
         if alive is None:
             alive = jnp.ones((q, v), dtype=bool)
+        if self._fused is not None:
+            # single-shard block: the fused step already emits the packed
+            # bitmask, so the packed transfer costs nothing extra here
+            r = self._fused(jnp.asarray(alive, dtype=bool),
+                            jnp.asarray(ts, jnp.int32),
+                            jnp.asarray(te, jnp.int32),
+                            jnp.int32(k), jnp.int32(h))
+            if packed:
+                return r.packed, r.tti_lo, r.tti_hi, r.n_edges, r.iters
+            return r.alive, r.tti_lo, r.tti_hi, r.n_edges, r.iters
         alive = jax.device_put(alive, self._sh["alive"])
         ts = jax.device_put(jnp.asarray(ts, jnp.int32), self._sh["lane"])
         te = jax.device_put(jnp.asarray(te, jnp.int32), self._sh["lane"])

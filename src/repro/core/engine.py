@@ -62,7 +62,7 @@ from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,72 +72,14 @@ from jax import lax
 from repro.core.graph import DeviceTEL
 from repro.core.results import CoreResult, QueryStats
 from repro.core.scheduler import QueryState, RowCursor
-from repro.core.wave import peel_to_fixpoint
-
-_I32_MAX = np.iinfo(np.int32).max
-_I32_MIN = np.iinfo(np.int32).min
-
-
-# ------------------------------------------------------------ bitmask pack
-def packed_width(num_vertices: int) -> int:
-    """uint32 words per packed [V] vertex mask."""
-    return max(1, -(-num_vertices // 32))
-
-
-def _pack_u32(alive: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
-    """[..., V] bool -> [..., ceil(V/32)] uint32; vertex v = bit v%32 of
-    word v//32 (LSB-first, matching np.unpackbits(bitorder="little"))."""
-    w = packed_width(num_vertices)
-    pad = w * 32 - num_vertices
-    a = jnp.pad(alive, [(0, 0)] * (alive.ndim - 1) + [(0, pad)])
-    a = a.reshape(a.shape[:-1] + (w, 32)).astype(jnp.uint32)
-    return jnp.sum(a << jnp.arange(32, dtype=jnp.uint32), axis=-1,
-                   dtype=jnp.uint32)
-
-
-@functools.partial(jax.jit, static_argnames=("num_vertices",))
-def pack_alive_u32(alive: jnp.ndarray, *, num_vertices: int) -> jnp.ndarray:
-    """Standalone jitted pack (used by the distributed engine's packed
-    result transfer; ``wave_step`` fuses the same computation inline)."""
-    return _pack_u32(alive, num_vertices)
-
-
-def unpack_alive_u32(packed: np.ndarray, num_vertices: int) -> np.ndarray:
-    """Host-side inverse of :func:`pack_alive_u32` — one bulk unpackbits."""
-    packed = np.ascontiguousarray(np.asarray(packed).astype("<u4",
-                                                            copy=False))
-    bits = np.unpackbits(packed.view(np.uint8), axis=-1, bitorder="little")
-    return bits[..., :num_vertices].astype(bool)
-
-
-# ------------------------------------------------------------- fused step
-class StepResult(NamedTuple):
-    alive: jnp.ndarray    # [W, V] bool — the persistent lane buffer
-    packed: jnp.ndarray   # [W, ceil(V/32)] uint32 bitmask of `alive`
-    tti_lo: jnp.ndarray   # [W] int32 (I32_MAX when lane core is empty)
-    tti_hi: jnp.ndarray   # [W] int32 (I32_MIN when lane core is empty)
-    n_edges: jnp.ndarray  # [W] int32
-    iters: jnp.ndarray    # scalar int32 — shared fixpoint iterations
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("num_vertices", "seg_pair", "seg_vert"),
-                   donate_argnums=(1,))
-def wave_step(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
-              *, num_vertices: int, seg_pair, seg_vert) -> StepResult:
-    """One fused device step: peel W lanes to the fixpoint + TTI + stats +
-    bitmask pack.  ``ts``/``te``/``k``/``h`` are per-lane [W] vectors —
-    every lane may carry a different query's window and thresholds.
-    ``alive`` is donated — the lane buffer is peeled in place and handed
-    back as ``StepResult.alive``."""
-    alive, ea, iters = peel_to_fixpoint(
-        tel, alive, ts, te, k, h, num_vertices=num_vertices,
-        seg_pair=seg_pair, seg_vert=seg_vert)
-    n_edges = jnp.sum(ea, axis=1, dtype=jnp.int32)
-    tti_lo = jnp.min(jnp.where(ea, tel.t[None, :], _I32_MAX), axis=1)
-    tti_hi = jnp.max(jnp.where(ea, tel.t[None, :], _I32_MIN), axis=1)
-    return StepResult(alive, _pack_u32(alive, num_vertices),
-                      tti_lo, tti_hi, n_edges, iters)
+# The device step itself (StepResult, the XLA-composite wave_step, the
+# fused-Pallas dispatcher and the bitmask pack helpers) lives in
+# core/wave.py next to the peel loop; re-exported here because the
+# engine is their primary consumer and external callers import them
+# from this module.
+from repro.core.wave import (StepResult, make_wave_step_fn,  # noqa: F401
+                             pack_alive_u32, packed_width,
+                             unpack_alive_u32, wave_step)
 
 
 # ---------------------------------------------------------- lane refills
@@ -181,13 +123,24 @@ class WavePipeline:
     """
 
     def __init__(self, tel: DeviceTEL, num_vertices: int,
-                 seg_pair, seg_vert, wave: int, depth: int = 2):
+                 seg_pair, seg_vert, wave: int, depth: int = 2,
+                 step_fn=None):
         self.tel = tel
         self.num_vertices = num_vertices
         self.seg_pair = seg_pair
         self.seg_vert = seg_vert
         self.wave = wave
         self.depth = max(1, int(depth))
+        # the device step: a prebuilt ``make_wave_step_fn`` closure (the
+        # engine pins one per windowed TEL so the fused kernel's host-side
+        # band analysis is never rebuilt per pipeline), else the default
+        # dispatch — fused Pallas on TPU, XLA composite elsewhere.  The
+        # lane buffer is donated through every step either way.
+        if step_fn is None:
+            step_fn = make_wave_step_fn(tel, num_vertices,
+                                        seg_pair=seg_pair, seg_vert=seg_vert,
+                                        donate=True)
+        self._step = step_fn
 
     def run(self, uts: np.ndarray, k: int, h: int, prune: bool,
             stats: QueryStats) -> Dict[Tuple[int, int], CoreResult]:
@@ -277,11 +230,9 @@ class WavePipeline:
                 ts_arr[li], te_arr[li] = s.window(row)
                 k_arr[li], h_arr[li] = s.k, s.h
                 s.stats.cells_evaluated += 1
-            slot.inflight = wave_step(
-                self.tel, slot.buf, jnp.asarray(ts_arr), jnp.asarray(te_arr),
-                jnp.asarray(k_arr), jnp.asarray(h_arr),
-                num_vertices=self.num_vertices,
-                seg_pair=self.seg_pair, seg_vert=self.seg_vert)
+            slot.inflight = self._step(
+                slot.buf, jnp.asarray(ts_arr), jnp.asarray(te_arr),
+                jnp.asarray(k_arr), jnp.asarray(h_arr))
             slot.buf = slot.inflight.alive   # donated through; new handle
             pool_stats.device_steps += 1
             nonlocal occupied_total

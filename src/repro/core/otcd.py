@@ -85,6 +85,7 @@ class WindowTEL(NamedTuple):
     seg_vert: object         # halfpair->vertex segsum closure
     num_vertices: int        # device vertex width (capacity, >= live V)
     window_edges: int        # live (non-sentinel) edges inside the window
+    step_fn: object = None   # pinned wave step (make_wave_step_fn closure)
 
 
 class _EpochAux(NamedTuple):
@@ -103,11 +104,14 @@ class _EpochAux(NamedTuple):
 class TCQEngine:
     """Holds the device TEL + compiled TCD programs for one temporal graph.
 
-    ``use_kernel`` selects the batched degree path for wave mode: True
-    forces the Pallas banded kernel (interpret mode off-TPU), False the
-    XLA segment-sum reference, None (default) auto-dispatches.  The
-    closures — including the kernel's k_max band analysis — are built
-    once per engine epoch and reused by every wave query on this engine.
+    ``use_kernel`` selects the device step for wave mode: True forces
+    the Pallas paths — the fused peel-to-fixpoint wave kernel
+    (``kernels/wave_peel``) plus the banded segsum closures (interpret
+    mode off-TPU) — False the XLA composite / segment-sum reference,
+    None (default) auto-dispatches.  The closures — including the
+    kernels' host-side band analyses — are built once per engine epoch
+    (full TEL) or per cached window truncation and reused by every wave
+    query on this engine.
 
     The engine is streaming-capable: :meth:`update_graph` installs a new
     graph snapshot under a fresh epoch.  ``num_vertices`` is the *device*
@@ -249,12 +253,19 @@ class TCQEngine:
         if hit is not None:
             self._win_cache.move_to_end(key)
             return hit
+        from repro.core.wave import make_wave_step_fn
+
         aux = self._aux_for(ep, g)
         idx = np.flatnonzero((g.t >= Ts) & (g.t <= Te))
         e = int(idx.size)
         if ep == self.epoch and e >= g.num_edges:
+            step = make_wave_step_fn(self.tel, self._v_cap,
+                                     seg_pair=self._seg_pair,
+                                     seg_vert=self._seg_vert,
+                                     use_kernel=self._use_kernel,
+                                     donate=True)
             out = WindowTEL(self.tel, self._seg_pair, self._seg_vert,
-                            self._v_cap, e)
+                            self._v_cap, e, step)
         else:
             bucket = pow2_capacity(e)
             pad = bucket - e
@@ -286,7 +297,15 @@ class TCQEngine:
                                               use_kernel=True)
             else:
                 seg_pair = aux.seg_pair_full
-            out = WindowTEL(tel, seg_pair, aux.seg_vert, aux.v_cap, e)
+            # pin the fused (or composite) wave step per cache entry: the
+            # fused kernel's host-side band tables follow this truncation's
+            # segment ids, so they are built once per (epoch, Ts, Te) and
+            # shared by every pipeline that peels this window
+            step = make_wave_step_fn(tel, aux.v_cap, seg_pair=seg_pair,
+                                     seg_vert=aux.seg_vert,
+                                     use_kernel=self._use_kernel,
+                                     donate=True)
+            out = WindowTEL(tel, seg_pair, aux.seg_vert, aux.v_cap, e, step)
         if len(self._win_cache) >= _WINDOW_CACHE_MAX:
             self._win_cache.popitem(last=False)     # evict least-recent
         self._win_cache[key] = out
@@ -344,7 +363,8 @@ class TCQEngine:
                 wave = autotune_wave(wt.num_vertices, wt.window_edges,
                                      depth=depth)
             pipe = WavePipeline(wt.tel, wt.num_vertices,
-                                wt.seg_pair, wt.seg_vert, wave, depth)
+                                wt.seg_pair, wt.seg_vert, wave, depth,
+                                step_fn=wt.step_fn)
             cores = pipe.run(uts, k, h, prune, stats)
         elif self._degree_fn is not None:
             # custom degree fns are written against the graph's real TEL
@@ -434,7 +454,8 @@ class TCQEngine:
                                      num_queries=len(states), depth=depth)
             pool_stats = QueryStats()
             pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
-                                wt.seg_vert, wave, depth)
+                                wt.seg_vert, wave, depth,
+                                step_fn=wt.step_fn)
             pipe.run_pool([s for _, s in states], pool_stats)
             for qi, s in states:
                 st = s.stats

@@ -305,7 +305,8 @@ class TCQService:
             wave = autotune_wave(wt.num_vertices, wt.window_edges,
                                  num_queries=len(members), depth=self.depth)
         pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
-                            wt.seg_vert, wave, self.depth)
+                            wt.seg_vert, wave, self.depth,
+                            step_fn=wt.step_fn)
         states = [self._make_state(tk) for tk in members]
         pool_stats = QueryStats()
         t0 = time.perf_counter()

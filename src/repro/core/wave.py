@@ -2,17 +2,36 @@
 
 `tcd_batch` (tcd.py) vmaps the scalar path; this module lays the data out
 the way the MXU wants it — values [E, Q] / [2P, Q] — so the two segment
-reductions become banded one-hot matmuls (the Pallas kernel), and the whole
-wave shares one fixpoint loop.  The edge-activity / degree split lets
-callers (engine.py's fused ``wave_step``) carry edge activity through the
-fixpoint loop and skip the post-loop edge pass.  This is also the
-single-shard block of the distributed engine (distributed.py wraps it in
-shard_map with a cross-shard degree combine).
+reductions become banded one-hot matmuls (the Pallas segdeg kernel), and
+the whole wave shares one fixpoint loop.  The edge-activity / degree
+split lets callers carry edge activity through the fixpoint loop and
+skip the post-loop edge pass.  This is also the single-shard block of
+the distributed engine (distributed.py wraps it in shard_map with a
+cross-shard degree combine).
+
+The device step itself — :func:`wave_step` (peel + TTI + stats + uint32
+bitmask pack in one program) — lives here too, with two lowerings behind
+one dispatcher, :func:`make_wave_step_fn`:
+
+  * **fused Pallas** (``kernels/wave_peel``): the entire fixpoint loop
+    runs on-chip per W-tile — no [W, E] HBM round-trips between
+    iterations (compiled on TPU, interpret mode for CPU gates);
+  * **XLA composite** (this module's ``peel_to_fixpoint`` chain): the
+    portable fallback, also used when a TEL's VMEM working set exceeds
+    the kernel budget.
+
+Both lowerings are bit-identical (seeded fuzz gate in
+tests/test_kernels.py); ``engine.WavePipeline``, :func:`tcd_wave` and
+the distributed engine's single-shard block all route through the
+dispatcher, so one kernel serves the single-query, batched and sharded
+engines.
 """
 
 from __future__ import annotations
 
 import functools
+import weakref
+from collections import OrderedDict
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -35,6 +54,16 @@ class WaveResult(NamedTuple):
     iters: jnp.ndarray    # scalar: fixpoint iterations of the wave
 
 
+# ------------------------------------------------------- segsum closures
+# (id(graph), epoch, use_kernel, interpret) -> (weakref(graph), closures).
+# The band analysis (np.sort over 2P half-pairs + the kernel's k_max pass)
+# used to rerun on every engine/bench construction for the same snapshot;
+# epochs are immutable, so it is cacheable.  The weakref guards against
+# id() reuse after a graph is collected.
+_SEGSUM_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_SEGSUM_CACHE_MAX = 16
+
+
 def make_segsum_fns(graph: TemporalGraph, *, use_kernel: Optional[bool] = None,
                     interpret: Optional[bool] = None):
     """(edges->pairs, halfpairs->vertices) segment-sum closures for a graph.
@@ -42,18 +71,28 @@ def make_segsum_fns(graph: TemporalGraph, *, use_kernel: Optional[bool] = None,
     use_kernel=True routes through the Pallas banded kernel (interpret mode
     on CPU); False uses jax.ops.segment_sum (XLA scatter path); None (the
     default) auto-dispatches — compiled Pallas on TPU, XLA elsewhere.  The
-    band analysis (k_max) runs here, once per graph/engine.
+    band analysis (k_max) runs once per ``(graph, epoch)`` and is cached
+    (graphs are immutable snapshots; appends bump ``epoch``).
     """
     from repro.kernels.segdeg.ops import make_banded_segsum, on_tpu
 
     if use_kernel is None:
         use_kernel = on_tpu()
+    key = (id(graph), graph.epoch, bool(use_kernel), interpret)
+    hit = _SEGSUM_CACHE.get(key)
+    if hit is not None and hit[0]() is graph:
+        _SEGSUM_CACHE.move_to_end(key)
+        return hit[1]
     tel_hp_src = np.sort(np.concatenate([graph.pair_u, graph.pair_v]))
     seg_pair = make_banded_segsum(graph.pair_id, graph.num_pairs,
                                   use_kernel=use_kernel, interpret=interpret)
     seg_vert = make_banded_segsum(tel_hp_src, graph.num_vertices,
                                   use_kernel=use_kernel, interpret=interpret)
-    return seg_pair, seg_vert
+    fns = (seg_pair, seg_vert)
+    _SEGSUM_CACHE[key] = (weakref.ref(graph), fns)
+    while len(_SEGSUM_CACHE) > _SEGSUM_CACHE_MAX:
+        _SEGSUM_CACHE.popitem(last=False)
+    return fns
 
 
 def wave_edge_activity(tel: DeviceTEL, alive: jnp.ndarray, ts, te
@@ -88,7 +127,7 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
                      *, num_vertices: int, seg_pair, seg_vert,
                      max_iters: int = 0):
     """Shared batched peel loop -> (alive, ea, iters); trace-time building
-    block for `tcd_wave` and engine.wave_step.
+    block for `tcd_wave` and the composite ``wave_step`` lowering.
 
     k and h may be scalars (one threshold for the whole wave) or per-lane
     [Q] vectors — the multi-tenant scheduler packs cells from queries with
@@ -102,6 +141,15 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
     q = alive.shape[0]
     k_lane = jnp.broadcast_to(jnp.asarray(k, jnp.int32), (q,))
     h_lane = jnp.broadcast_to(jnp.asarray(h, jnp.int32), (q,))
+    ts = jnp.broadcast_to(jnp.asarray(ts, jnp.int32), (q,))
+    te = jnp.broadcast_to(jnp.asarray(te, jnp.int32), (q,))
+    # the [Q, E] window mask depends only on (ts, te), never on alive —
+    # computed once, reused by every fixpoint iteration (it used to be
+    # rebuilt inside the loop body on this path)
+    win = (tel.t[None, :] >= ts[:, None]) & (tel.t[None, :] <= te[:, None])
+
+    def edge_activity(cur):
+        return win & cur[:, tel.src] & cur[:, tel.dst]
 
     def cond(state):
         _, _, changed, it = state
@@ -112,7 +160,7 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
 
     def body(state):
         cur, _, _, it = state
-        ea = wave_edge_activity(tel, cur, ts, te)
+        ea = edge_activity(cur)
         deg = wave_degrees_from_ea(tel, ea, h_lane,
                                    num_vertices=num_vertices,
                                    seg_pair=seg_pair, seg_vert=seg_vert)
@@ -123,17 +171,167 @@ def peel_to_fixpoint(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
     alive, ea, _, iters = lax.while_loop(
         cond, body, (alive, ea0, jnp.bool_(True), jnp.int32(0)))
     if max_iters:  # truncated peel may exit pre-fixpoint: ea would be stale
-        ea = wave_edge_activity(tel, alive, ts, te)
+        ea = edge_activity(alive)
     return alive, ea, iters
+
+
+# ------------------------------------------------------------ bitmask pack
+def packed_width(num_vertices: int) -> int:
+    """uint32 words per packed [V] vertex mask."""
+    return max(1, -(-num_vertices // 32))
+
+
+def _pack_u32(alive: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
+    """[..., V] bool -> [..., ceil(V/32)] uint32; vertex v = bit v%32 of
+    word v//32 (LSB-first, matching np.unpackbits(bitorder="little"))."""
+    w = packed_width(num_vertices)
+    pad = w * 32 - num_vertices
+    a = jnp.pad(alive, [(0, 0)] * (alive.ndim - 1) + [(0, pad)])
+    a = a.reshape(a.shape[:-1] + (w, 32)).astype(jnp.uint32)
+    return jnp.sum(a << jnp.arange(32, dtype=jnp.uint32), axis=-1,
+                   dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices",))
+def pack_alive_u32(alive: jnp.ndarray, *, num_vertices: int) -> jnp.ndarray:
+    """Standalone jitted pack (used by the distributed engine's packed
+    result transfer; ``wave_step`` fuses the same computation inline)."""
+    return _pack_u32(alive, num_vertices)
+
+
+def unpack_alive_u32(packed: np.ndarray, num_vertices: int) -> np.ndarray:
+    """Host-side inverse of :func:`pack_alive_u32` — one bulk unpackbits."""
+    packed = np.ascontiguousarray(np.asarray(packed).astype("<u4",
+                                                            copy=False))
+    bits = np.unpackbits(packed.view(np.uint8), axis=-1, bitorder="little")
+    return bits[..., :num_vertices].astype(bool)
+
+
+# ------------------------------------------------------------- fused step
+class StepResult(NamedTuple):
+    alive: jnp.ndarray    # [W, V] bool — the persistent lane buffer
+    packed: jnp.ndarray   # [W, ceil(V/32)] uint32 bitmask of `alive`
+    tti_lo: jnp.ndarray   # [W] int32 (I32_MAX when lane core is empty)
+    tti_hi: jnp.ndarray   # [W] int32 (I32_MIN when lane core is empty)
+    n_edges: jnp.ndarray  # [W] int32
+    iters: jnp.ndarray    # scalar int32 — shared fixpoint iterations
+
+
+def _wave_step_impl(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
+                    *, num_vertices: int, seg_pair, seg_vert) -> StepResult:
+    alive, ea, iters = peel_to_fixpoint(
+        tel, alive, ts, te, k, h, num_vertices=num_vertices,
+        seg_pair=seg_pair, seg_vert=seg_vert)
+    n_edges = jnp.sum(ea, axis=1, dtype=jnp.int32)
+    tti_lo = jnp.min(jnp.where(ea, tel.t[None, :], _I32_MAX), axis=1)
+    tti_hi = jnp.max(jnp.where(ea, tel.t[None, :], _I32_MIN), axis=1)
+    return StepResult(alive, _pack_u32(alive, num_vertices),
+                      tti_lo, tti_hi, n_edges, iters)
+
+
+#: XLA-composite device step: peel W lanes to the fixpoint + TTI + stats +
+#: bitmask pack in one jitted program.  ``ts``/``te``/``k``/``h`` are
+#: per-lane [W] vectors — every lane may carry a different query's window
+#: and thresholds.  ``alive`` is donated — the lane buffer is peeled in
+#: place and handed back as ``StepResult.alive``.
+wave_step = functools.partial(
+    jax.jit, static_argnames=("num_vertices", "seg_pair", "seg_vert"),
+    donate_argnums=(1,))(_wave_step_impl)
+
+# non-donating twin for callers that reuse their alive buffer across calls
+# (tcd_wave, benches); same trace, separate jit cache
+_wave_step_nodonate = functools.partial(
+    jax.jit, static_argnames=("num_vertices", "seg_pair",
+                              "seg_vert"))(_wave_step_impl)
+
+
+def make_wave_step_fn(tel: DeviceTEL, num_vertices: int, *,
+                      seg_pair=None, seg_vert=None,
+                      use_kernel: Optional[bool] = None,
+                      interpret: Optional[bool] = None,
+                      w_tile: int = 8, donate: bool = False,
+                      vmem_budget_bytes: Optional[int] = None):
+    """Build the device step for one TEL: ``step(alive, ts, te, k, h) ->
+    StepResult``, with ``.backend`` ("pallas" | "xla") and ``.interpret``
+    attributes.
+
+    use_kernel=True routes through the fused Pallas peel-to-fixpoint
+    kernel (interpret mode off-TPU unless ``interpret`` says otherwise);
+    False through the XLA composite; None (default) auto-dispatches —
+    compiled Pallas on TPU, XLA elsewhere.  A TEL whose VMEM working set
+    exceeds the kernel budget falls back to the composite (the window
+    truncation normally keeps E far below that).  ``donate=True`` donates
+    the alive buffer (the pipeline's persistent lane slab); leave False
+    when the caller reuses its buffer across calls.
+
+    The two lowerings are bit-identical — alive, packed words, TTI lo/hi,
+    edge counts and the iteration count all match exactly (seeded fuzz
+    gate in tests/test_kernels.py).
+    """
+    from repro.kernels.segdeg.ops import on_tpu
+
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        from repro.kernels.wave_peel.ops import (DEFAULT_VMEM_BUDGET,
+                                                 make_fused_wave_step)
+
+        budget = (DEFAULT_VMEM_BUDGET if vmem_budget_bytes is None
+                  else int(vmem_budget_bytes))
+        fused = make_fused_wave_step(tel, num_vertices, w_tile=w_tile,
+                                     interpret=interpret, donate=donate,
+                                     vmem_budget_bytes=budget)
+        if fused is not None:
+            return fused
+    if seg_pair is None or seg_vert is None:
+        from repro.kernels.segdeg.ref import banded_segsum_ref
+
+        if seg_pair is None:
+            seg_pair = functools.partial(banded_segsum_ref,
+                                         num_segments=tel.num_pairs)
+        if seg_vert is None:
+            seg_vert = functools.partial(banded_segsum_ref,
+                                         num_segments=num_vertices)
+    inner = wave_step if donate else _wave_step_nodonate
+
+    def step(alive, ts, te, k, h):
+        return inner(tel, alive, ts, te, k, h, num_vertices=num_vertices,
+                     seg_pair=seg_pair, seg_vert=seg_vert)
+
+    step.backend = "xla"
+    step.interpret = False
+    return step
+
+
+def tcd_wave(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
+             *, num_vertices: int, seg_pair=None, seg_vert=None,
+             max_iters: int = 0, step_fn=None) -> WaveResult:
+    """Batched TCD to the fixpoint.  alive: [Q, V] warm-start supersets;
+    k/h: scalars or per-lane [Q] vectors (mixed-threshold waves).
+
+    Pass ``step_fn`` (from :func:`make_wave_step_fn`) to route through a
+    prebuilt device step — the fused Pallas kernel on TPU; otherwise the
+    jitted XLA composite runs against ``seg_pair``/``seg_vert``.
+    """
+    if step_fn is not None:
+        if max_iters:
+            raise ValueError(
+                "step_fn peels to the fixpoint; max_iters is only "
+                "supported on the composite path")
+        r = step_fn(alive, ts, te, k, h)
+        n_verts = jnp.sum(r.alive, axis=1, dtype=jnp.int32)
+        return WaveResult(r.alive, r.tti_lo, r.tti_hi, r.n_edges,
+                          n_verts, r.iters)
+    return _tcd_wave_xla(tel, alive, ts, te, k, h,
+                         num_vertices=num_vertices, seg_pair=seg_pair,
+                         seg_vert=seg_vert, max_iters=max_iters)
 
 
 @functools.partial(jax.jit, static_argnames=("num_vertices", "seg_pair",
                                              "seg_vert", "max_iters"))
-def tcd_wave(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
-             *, num_vertices: int, seg_pair, seg_vert,
-             max_iters: int = 0) -> WaveResult:
-    """Batched TCD to the fixpoint.  alive: [Q, V] warm-start supersets;
-    k/h: scalars or per-lane [Q] vectors (mixed-threshold waves)."""
+def _tcd_wave_xla(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,
+                  *, num_vertices: int, seg_pair, seg_vert,
+                  max_iters: int = 0) -> WaveResult:
     alive, ea, iters = peel_to_fixpoint(
         tel, alive, ts, te, k, h, num_vertices=num_vertices,
         seg_pair=seg_pair, seg_vert=seg_vert, max_iters=max_iters)

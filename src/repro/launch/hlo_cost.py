@@ -385,6 +385,56 @@ class HLOCost:
         return self._fusion_memo[name]
 
     # ------------------------------------------------------------- summaries
+    def while_bodies(self) -> Dict[str, Dict[str, float]]:
+        """Per-iteration cost of every while-loop body in the module:
+        ``{body: {"flops", "bytes", "trips", "dynamic"}}``.  A body's
+        flops/bytes already fold in its *nested* counted loops (trip-
+        multiplied), so summing the ``dynamic`` bodies gives the per-
+        iteration cost of the data-dependent loops.  A dynamic-condition
+        loop (a peel fixpoint) has no static trip count — ``self.bytes``
+        counts its body once, and callers add ``(iters - 1) * bytes`` to
+        model an N-iteration run: exactly the unfused-chain per-iteration
+        HBM traffic the fused wave-peel kernel eliminates."""
+        out: Dict[str, Dict[str, float]] = {}
+        for cost in self.costs.values():
+            for child, mult, kind in cost.edges:
+                if kind == "loop" and child in self.costs:
+                    f, b, _ = self._total(child, set())
+                    trips = self._resolve_trips(mult)
+                    out[child] = {"flops": f, "bytes": b, "trips": trips,
+                                  "dynamic": isinstance(mult, tuple)
+                                  and trips == 1.0}
+        return out
+
+    def shape_census(self, dims: Tuple[int, ...]) -> int:
+        """Count HBM-crossing buffer materializations of one exact shape.
+
+        Walks every non-fusion-body computation and counts op *results*
+        (non-free opcodes) whose output shape matches ``dims`` — i.e. how
+        many times a buffer of that shape is written to HBM somewhere in
+        the program (loop bodies count once, not per trip).  Used by
+        benchmarks/perf_lower.py to assert the unfused peel chain
+        materializes [W, E] edge-activity arrays while the fused lowering
+        has none."""
+        want = ",".join(str(int(d)) for d in dims)
+        fusion_bodies = {child for cost in self.costs.values()
+                         for child, _m, kind in cost.edges
+                         if kind == "fusion"}
+        n = 0
+        for name, text in self.comps.items():
+            if name in fusion_bodies:
+                continue  # in-register; never an HBM buffer
+            for line in text.splitlines():
+                om = _OP_RE.search(line)
+                if not om or om.group(1) in _FREE_OPS:
+                    continue
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                if any(d == want for _t, d in _SHAPE_RE.findall(dm.group(2))):
+                    n += 1
+        return n
+
     def collective_ops(self) -> List[Collective]:
         out = []
         for (kind, gsz), v in self.collectives.items():

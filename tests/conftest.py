@@ -6,3 +6,11 @@ import os
 # 1-device meshes; multi-device behaviour is exercised via subprocess tests
 # that launch dryrun.py.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "kernel_gate: interpret-mode fused wave-peel kernel equivalence "
+        "gate (CI runs `-m kernel_gate` with REPRO_KERNEL_GATE=1 for the "
+        "widened sweep; the tests also run in plain tier-1)")

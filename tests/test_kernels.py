@@ -5,6 +5,8 @@ executes the same kernel body).  Sweeps cover ragged sizes, empty segments,
 hub segments (band wider than one tile), padding tails, and dtypes.
 """
 
+import os
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -140,6 +142,144 @@ def test_wave_engine_matches_oracle():
             [g.src[em], g.dst[em]])).tolist()) if em.any() else set())
         got = set(np.flatnonzero(np.asarray(res.alive[i])).tolist())
         assert got == verts
+
+
+# ------------------------------------------------- fused wave-peel kernel
+# Seeded equivalence fuzz: the fused Pallas peel-to-fixpoint kernel
+# (interpret mode on CPU — same kernel body as the TPU lowering) must be
+# BIT-identical to the XLA composite on every StepResult field.  This is
+# the correctness gate behind `BENCH_wave.json`'s kernel section and the
+# CI `kernel_gate` job; REPRO_KERNEL_GATE=1 widens the sweep.
+
+_FUZZ_SEEDS = range(24 if os.environ.get("REPRO_KERNEL_GATE") == "1" else 6)
+
+
+def _random_temporal_graph(rng):
+    from repro.core.graph import TemporalGraph
+
+    v = int(rng.integers(3, 60))
+    e = int(rng.integers(5, 400))
+    tmax = int(rng.integers(4, 60))
+    u = rng.integers(0, v, e)
+    w = rng.integers(0, v, e)
+    keep = u != w
+    u, w = u[keep], w[keep]
+    if u.size == 0:
+        u, w = np.array([0]), np.array([v - 1])
+    t = rng.integers(0, tmax, u.size)
+    return TemporalGraph.from_edges(u, w, t, num_vertices=v), tmax
+
+
+def _fuzz_fused_vs_composite(seed, *, capacity_padding):
+    from repro.core.graph import pow2_capacity
+    from repro.core.wave import make_wave_step_fn, unpack_alive_u32
+
+    rng = np.random.default_rng(seed)
+    g, tmax = _random_temporal_graph(rng)
+    if capacity_padding:
+        # capacity-class TEL: sentinel edges (t=int32 min, pair_id=P_cap)
+        # and sentinel half-pairs (hp_src=V_cap) in every table tail
+        nv = pow2_capacity(g.num_vertices)
+        tel = g.device_tel(edge_capacity=pow2_capacity(g.num_edges),
+                           pair_capacity=pow2_capacity(g.num_pairs),
+                           vertex_capacity=nv)
+    else:
+        nv = g.num_vertices
+        tel = g.device_tel()
+    w_tile = int(rng.choice([4, 8]))
+    fused = make_wave_step_fn(tel, nv, use_kernel=True, w_tile=w_tile)
+    comp = make_wave_step_fn(tel, nv, use_kernel=False)
+    assert fused.backend == "pallas" and fused.interpret
+    assert comp.backend == "xla"
+
+    W = int(rng.integers(1, 12))     # rarely a w_tile multiple
+    ts = rng.integers(0, tmax, W).astype(np.int32)
+    te = (ts + rng.integers(0, tmax, W)).astype(np.int32)
+    empty = rng.random(W) < 0.25     # pipeline-style idle padding lanes
+    ts[empty], te[empty] = 0, -1
+    k = rng.integers(1, 5, W).astype(np.int32)
+    h = rng.integers(1, 3, W).astype(np.int32)
+    if rng.random() < 0.5:
+        alive = jnp.asarray(rng.random((W, nv)) < 0.8)   # warm-start rows
+    else:
+        alive = jnp.ones((W, nv), dtype=bool)
+
+    args = (alive, jnp.asarray(ts), jnp.asarray(te),
+            jnp.asarray(k), jnp.asarray(h))
+    rf, rc = fused(*args), comp(*args)
+    for field in ("alive", "packed", "tti_lo", "tti_hi", "n_edges", "iters"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rf, field)), np.asarray(getattr(rc, field)),
+            err_msg=f"fused vs composite diverge on {field} (seed={seed})")
+    assert np.asarray(rf.packed).dtype == np.uint32
+    np.testing.assert_array_equal(
+        unpack_alive_u32(np.asarray(rf.packed), nv), np.asarray(rf.alive))
+
+
+@pytest.mark.kernel_gate
+@pytest.mark.parametrize("seed", _FUZZ_SEEDS)
+def test_fused_wave_peel_matches_composite(seed):
+    _fuzz_fused_vs_composite(1000 + seed, capacity_padding=False)
+
+
+@pytest.mark.kernel_gate
+@pytest.mark.parametrize("seed", _FUZZ_SEEDS)
+def test_fused_wave_peel_matches_composite_capacity_padded(seed):
+    _fuzz_fused_vs_composite(2000 + seed, capacity_padding=True)
+
+
+@pytest.mark.kernel_gate
+def test_fused_step_through_tcd_wave():
+    """The step_fn route of tcd_wave == the jitted XLA route, including
+    the derived n_verts, on a planted-cores graph."""
+    from repro.core.wave import make_segsum_fns, make_wave_step_fn, tcd_wave
+    from repro.graphs import planted_cores
+
+    g = planted_cores(seed=11)
+    tel = g.device_tel()
+    sp, sv = make_segsum_fns(g, use_kernel=False)
+    step = make_wave_step_fn(tel, g.num_vertices, use_kernel=True)
+    ts = jnp.asarray([1, 5, 0], jnp.int32)
+    te = jnp.asarray([40, 30, -1], jnp.int32)
+    k = jnp.asarray([3, 2, 1], jnp.int32)
+    h = jnp.asarray([1, 1, 1], jnp.int32)
+    alive0 = jnp.ones((3, g.num_vertices), dtype=bool)
+    ref = tcd_wave(tel, alive0, ts, te, k, h, num_vertices=g.num_vertices,
+                   seg_pair=sp, seg_vert=sv)
+    got = tcd_wave(tel, alive0, ts, te, k, h, num_vertices=g.num_vertices,
+                   step_fn=step)
+    for field in ("alive", "tti_lo", "tti_hi", "n_edges", "n_verts", "iters"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(ref, field)))
+
+
+def test_fused_vmem_budget_falls_back_to_composite():
+    """A TEL whose working set exceeds the VMEM budget must yield the
+    composite from the dispatcher (never a kernel that can't fit)."""
+    from repro.core.wave import make_wave_step_fn
+    from repro.graphs import planted_cores
+
+    g = planted_cores(seed=3)
+    tel = g.device_tel()
+    step = make_wave_step_fn(tel, g.num_vertices, use_kernel=True,
+                             interpret=False, vmem_budget_bytes=1024)
+    assert step.backend == "xla"
+
+
+def test_segsum_fns_cached_per_epoch():
+    """make_segsum_fns: same (graph, epoch, path) => same closures; a
+    streaming append (new epoch) refreshes them."""
+    from repro.core.wave import make_segsum_fns
+    from repro.graphs import planted_cores
+
+    g = planted_cores(seed=9)
+    a = make_segsum_fns(g, use_kernel=False)
+    b = make_segsum_fns(g, use_kernel=False)
+    assert a == b
+    assert make_segsum_fns(g, use_kernel=True) != a
+    g2 = g.add_edges([0], [1], [99])
+    assert g2.epoch != g.epoch
+    assert make_segsum_fns(g2, use_kernel=False) != a
 
 
 # ---------------------------------------------------------------- ssm scan
