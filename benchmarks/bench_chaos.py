@@ -1,0 +1,249 @@
+"""Chaos harness: seeded fault injection over the full serving stack,
+gated on bit-identical results vs the fault-free run.
+
+Every scenario replays the *same deterministic workload* (the
+anti-union request set of ``bench_streaming``) through a ``TCQService``
+whose engine runs the graceful-degradation ladder
+(``ResilienceConfig``), with one fault class injected per scenario via
+``core/faultinject.py``:
+
+1. ``slow_lane`` — straggler steps (injected sleeps); results must not
+   move, only latency.
+2. ``kernel_vmem`` — the fused Pallas rung is built under a 1-byte VMEM
+   budget (``interpret=False``) and is unavailable from the start: the
+   ladder opens on the XLA rung and logs the demotion.
+3. ``kernel_failure`` — the XLA rung raises an injected
+   :class:`KernelFault` mid-pool; the ladder demotes to the oracle and
+   replays the failed call bit-identically.
+4. ``divergence`` — the XLA rung silently corrupts one vertex's alive
+   bit; the sampled oracle tripwire catches it, quarantines the rung for
+   the epoch, and replays on the oracle.
+5. ``malformed_ingest`` — a stream of invalid edge batches (negative /
+   overflowing / NaN / mismatched / sentinel-colliding) lands mid-run;
+   each must raise :class:`GraphIngestError` and leave the graph (and
+   every result) untouched.
+6. ``midpool_cancel`` — one ticket is cancelled mid-pool and another
+   expires via a past deadline; their lanes are reclaimed, both resolve
+   with terminal statuses, and every *surviving* ticket stays
+   bit-identical.
+7. ``crash_restore`` — the service is snapshotted mid-queue, serialized
+   through an in-memory ``.npz``, restored, and drained; the union of
+   pre-crash and post-restore results must equal the uninterrupted run.
+
+Any divergence raises (``assert_cores_equal``), so ``python -m
+benchmarks.run`` — and the CI ``chaos_gate`` job (``REPRO_CHAOS=1``,
+which widens the seed sweep) — fail on a broken recovery path exactly
+like a wrong core.  A final closed-loop run at ~2x overload records the
+shed rate and p99 under backpressure for the BENCH_wave.json ``chaos``
+trajectory.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import time
+
+import numpy as np
+
+from benchmarks.bench_streaming import disjoint_requests
+from benchmarks.common import SMOKE, assert_cores_equal, emit, graph
+
+CHAOS = os.environ.get("REPRO_CHAOS", "") not in ("", "0")
+SEEDS = (0, 1, 2) if CHAOS else (0,)
+
+
+def _sig(reqs):
+    return [(r["k"], r.get("h", 1), r["ts"], r["te"]) for r in reqs]
+
+
+def _serve(svc, reqs, poll=None):
+    tickets = [svc.submit(dict(r)) for r in reqs]
+    svc.run_until_idle(poll)
+    return tickets
+
+
+def _gate(tickets, ref, *, skip=(), ctx=""):
+    """Every non-skipped ticket bit-identical to the fault-free run."""
+    for i, (tk, want) in enumerate(zip(tickets, ref)):
+        if i in skip:
+            continue
+        assert_cores_equal(tk.result, want.result,
+                           ctx=f"chaos[{ctx}] req#{i}")
+
+
+def _events(svc):
+    return svc.engine.resilience_events()
+
+
+def run_scenarios(name: str, seed: int):
+    from repro.core import ResilienceConfig, TCQService
+    from repro.core.faultinject import (FaultPlan, KernelFault,
+                                        malformed_batches, rung_faults)
+    from repro.core.graph import GraphIngestError
+
+    g = graph(name)
+    reqs = disjoint_requests(name)
+    rows = []
+
+    def scenario(tag, fn):
+        t0 = time.perf_counter()
+        extra = fn()
+        rows.append({"bench": "chaos", "scenario": tag, "graph": name,
+                     "seed": seed, "n_queries": len(reqs),
+                     "equivalent": True,      # the gates above raised
+                     "wall_s": time.perf_counter() - t0, **(extra or {})})
+
+    # fault-free reference (ladder on, no injection — the ladder itself
+    # must be invisible when nothing fails)
+    svc0 = TCQService(g, use_kernel=False,
+                      resilience=ResilienceConfig(seed=seed))
+    ref = _serve(svc0, reqs)
+    assert not _events(svc0), _events(svc0)
+
+    def slow_lane():
+        cfg = ResilienceConfig(seed=seed, rung_wrapper=rung_faults(
+            {"xla": FaultPlan(slow_at=(0, 2, 5), delay_s=0.02)}))
+        svc = TCQService(g, use_kernel=False, resilience=cfg)
+        _gate(_serve(svc, reqs), ref, ctx="slow_lane")
+        assert not _events(svc), _events(svc)   # stragglers never demote
+        return {"demotions": 0}
+    scenario("slow_lane", slow_lane)
+
+    def kernel_vmem():
+        # fused rung built under an impossible VMEM budget (and
+        # interpret=False so the budget check actually runs off-TPU):
+        # unavailable from call zero, ladder opens on XLA
+        cfg = ResilienceConfig(seed=seed, interpret=False,
+                               vmem_budget_bytes=1)
+        svc = TCQService(g, use_kernel=True, resilience=cfg)
+        _gate(_serve(svc, reqs), ref, ctx="kernel_vmem")
+        evs = _events(svc)
+        assert evs and all(e["reason"] == "vmem_budget" for e in evs), evs
+        return {"demotions": len(evs), "reason": "vmem_budget"}
+    scenario("kernel_vmem", kernel_vmem)
+
+    def kernel_failure():
+        cfg = ResilienceConfig(seed=seed, rung_wrapper=rung_faults(
+            {"xla": FaultPlan(fail_at=(1,))}))
+        svc = TCQService(g, use_kernel=False, resilience=cfg)
+        _gate(_serve(svc, reqs), ref, ctx="kernel_failure")
+        evs = _events(svc)
+        assert any(e["reason"] == "error" for e in evs), evs
+        return {"demotions": len(evs), "reason": "error"}
+    scenario("kernel_failure", kernel_failure)
+
+    def divergence():
+        cfg = ResilienceConfig(seed=seed, tripwire_every=1,
+                               rung_wrapper=rung_faults(
+                                   {"xla": FaultPlan(corrupt_at=(0,))}))
+        svc = TCQService(g, use_kernel=False, resilience=cfg)
+        _gate(_serve(svc, reqs), ref, ctx="divergence")
+        evs = _events(svc)
+        assert any(e["reason"] == "divergence" for e in evs), evs
+        return {"demotions": len(evs), "reason": "divergence"}
+    scenario("divergence", divergence)
+
+    def malformed_ingest():
+        svc = TCQService(g, use_kernel=False,
+                         resilience=ResilienceConfig(seed=seed))
+        bad = malformed_batches(seed)
+        state = {"i": 0, "rejected": 0}
+
+        def poll(s):
+            if state["i"] < len(bad):
+                u, v, t = bad[state["i"]]
+                state["i"] += 1
+                epoch0 = s.epoch
+                try:
+                    s.push_edges(u, v, t)
+                except GraphIngestError:
+                    state["rejected"] += 1
+                assert s.epoch == epoch0     # rejected batch: no epoch
+
+        tickets = _serve(svc, reqs, poll)
+        # drain any batches the poll never reached (short pools)
+        while state["i"] < len(bad):
+            poll(svc)
+        assert state["rejected"] == len(bad), (state, len(bad))
+        _gate(tickets, ref, ctx="malformed_ingest")
+        return {"batches_rejected": state["rejected"]}
+    scenario("malformed_ingest", malformed_ingest)
+
+    def midpool_cancel():
+        svc = TCQService(g, use_kernel=False,
+                         resilience=ResilienceConfig(seed=seed))
+        tickets = [svc.submit(dict(r)) for r in reqs]
+        # one already-expired deadline (times out at the first sweep) ...
+        doomed = svc.submit({**reqs[0], "deadline_s": -1.0})
+        state = {"polls": 0}
+
+        def poll(s):
+            state["polls"] += 1
+            if state["polls"] == 2:          # mid-pool: lanes are live
+                s.cancel(tickets[0])         # the widest (longest) member
+        svc.run_until_idle(poll)
+        assert doomed.status == "timeout" and doomed.done
+        assert tickets[0].status == "cancelled" and tickets[0].done
+        assert tickets[0].result is not None      # partial, not missing
+        _gate(tickets, ref, skip={0}, ctx="midpool_cancel")
+        return {"cancelled": 1, "timeouts": 1}
+    scenario("midpool_cancel", midpool_cancel)
+
+    def crash_restore():
+        svc = TCQService(g, use_kernel=False,
+                         resilience=ResilienceConfig(seed=seed))
+        for r in reqs:
+            svc.submit(dict(r))
+        early = svc.pump()                   # some resolve pre-crash
+        buf = io.BytesIO()
+        svc.save_snapshot(buf)               # ... crash ...
+        buf.seek(0)
+        from repro.core import TCQService as Svc
+        svc2 = Svc.load_snapshot(buf, use_kernel=False,
+                                 resilience=ResilienceConfig(seed=seed))
+        late = svc2.run_until_idle()
+        by_id = {tk.id: tk for tk in early + late}
+        assert len(by_id) == len(reqs), (sorted(by_id), len(reqs))
+        for i in range(len(reqs)):
+            assert_cores_equal(by_id[i].result, ref[i].result,
+                               ctx=f"chaos[crash_restore] req#{i}")
+        return {"resolved_precrash": len(early),
+                "resolved_postrestore": len(late)}
+    scenario("crash_restore", crash_restore)
+
+    return rows
+
+
+def run_overload(name: str):
+    """Closed loop at ~2x overload: concurrency far above what the
+    bounded queue admits, tight deadlines — records shed rate and p99
+    under backpressure (the BENCH_wave.json ``chaos`` headline)."""
+    from repro.launch.serve import serve_closed_loop
+
+    g = graph(name)
+    base = disjoint_requests(name)
+    n = 12 if SMOKE else 24
+    reqs = [dict(base[i % len(base)]) for i in range(n)]
+    svc, tickets, rep = serve_closed_loop(
+        g, reqs, concurrency=16, queue_cap=8, deadline_s=30.0)
+    assert rep["completed"] + rep["shed"] + rep["timeouts"] == n, rep
+    # bounded p99: the deadline is the latency ceiling — a completed
+    # request can never have waited past it
+    assert rep["p99_ms"] <= 30_000.0, rep
+    return [{"bench": "chaos_overload", "graph": name, "n_queries": n,
+             "overload_x": 2.0, **rep}]
+
+
+def run(name: str = "collegemsg"):
+    rows = []
+    for seed in SEEDS:
+        rows += run_scenarios(name, seed)
+    rows += run_overload(name)
+    emit("bench_chaos", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -27,10 +27,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_distribution, bench_k, bench_memory,
-                            bench_pipeline, bench_pruning, bench_queries,
-                            bench_service, bench_span, bench_streaming,
-                            bench_wave)
+    from benchmarks import (bench_chaos, bench_distribution, bench_k,
+                            bench_memory, bench_pipeline, bench_pruning,
+                            bench_queries, bench_service, bench_span,
+                            bench_streaming, bench_wave)
     from benchmarks.common import SMOKE
 
     print("name,us_per_call,derived")
@@ -194,12 +194,33 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
 
+    try:
+        # chaos gate: every fault scenario must stay bit-identical to
+        # the fault-free run (the module raises otherwise), so injected
+        # kernel failures / corruption / crashes fail the harness just
+        # like a wrong core would
+        crows = bench_chaos.run()
+        trajectory["chaos"] = crows
+        for r in crows:
+            if r["bench"] == "chaos":
+                row(f"chaos/{r['scenario']}/s{r['seed']}", r["wall_s"],
+                    f"equivalent={r['equivalent']} "
+                    f"demotions={r.get('demotions', 0)}")
+            else:
+                row("chaos/overload", r["wall_s"],
+                    f"shed_rate={r['shed_rate']:.2f} "
+                    f"p99={r['p99_ms']:.0f}ms "
+                    f"timeouts={r['timeouts']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
     # only a complete trajectory may replace the tracked file — a partial
     # write would clobber the last good cross-PR history (and smoke-sized
     # runs never overwrite the measured numbers)
     if not SMOKE and \
             {"wave", "kernel", "pipeline", "service",
-             "streaming"} <= trajectory.keys():
+             "streaming", "chaos"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

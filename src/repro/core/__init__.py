@@ -16,7 +16,8 @@ Public API:
 from repro.core.baseline import PHCIndex, iphc_query  # noqa: F401
 from repro.core.engine import (WavePipeline, pack_alive_u32,  # noqa: F401
                                unpack_alive_u32)
-from repro.core.graph import DeviceTEL, TemporalGraph  # noqa: F401
+from repro.core.graph import (DeviceTEL, GraphIngestError,  # noqa: F401
+                              TemporalGraph)
 from repro.core.oracle import brute_force_query, peel_window  # noqa: F401
 from repro.core.otcd import TCQEngine, temporal_kcore_query  # noqa: F401
 from repro.core.results import CoreResult, QueryStats, TCQResult  # noqa: F401
@@ -25,3 +26,5 @@ from repro.core.scheduler import (EmptyStaircase, QueryState,  # noqa: F401
 from repro.core.service import (TCQService, TCQTicket,  # noqa: F401
                                 cluster_windows)
 from repro.core.tcd import TCDResult, coreness, tcd, tcd_batch  # noqa: F401
+from repro.core.wave import (DegradationLadder,  # noqa: F401
+                             ResilienceConfig, make_oracle_step_fn)

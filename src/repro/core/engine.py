@@ -168,32 +168,65 @@ class WavePipeline:
         no drain barrier.  The pool only ends once every in-flight lane
         has retired *and* ``admit`` comes back empty, so a streaming
         service can keep the fused step full across request arrivals.
+
+        Admission is earliest-deadline-first: cells are claimed from the
+        live state with the smallest ``(deadline, priority)`` key, with
+        the original round-robin rotation breaking ties — so best-effort
+        pools (every deadline inf) schedule exactly as before, while a
+        deadline-carrying pool drains urgent queries first.  A state
+        whose ``cancelled`` flag is set (deadline timeout, client
+        cancellation — see ``TCQService``) stops claiming immediately
+        and its in-flight lanes are *reclaimed mid-pool*: freed at the
+        next assemble/retire without result feedback, ready for other
+        queries' cells.
         """
         W = self.wave
-        claimable = deque(s for s in states if s.n > 0)
+        claimable = deque(s for s in states if s.n > 0 and not s.cancelled)
         occupied_total = 0
 
         def refill() -> None:
             if admit is None:
                 return
             for s in admit():
-                if s.n > 0:
+                if s.n > 0 and not s.cancelled:
                     claimable.append(s)
                     pool_stats.admissions += 1
 
+        def _edf_key(s: QueryState) -> Tuple[float, int]:
+            return (s.deadline, s.priority)
+
         def claim() -> Optional[Tuple[QueryState, RowCursor]]:
             while claimable:
+                best = min(_edf_key(s) for s in claimable)
+                while _edf_key(claimable[0]) != best:
+                    claimable.rotate(-1)    # EDF: walk to an urgent state
                 s = claimable[0]
+                if s.cancelled:
+                    claimable.popleft()
+                    continue
                 row = s.claim()
                 if row is not None:
-                    claimable.rotate(-1)    # round-robin fairness
+                    claimable.rotate(-1)    # round-robin among EDF ties
                     return s, row
                 claimable.popleft()         # drained: nothing pending
             return None
 
+        def release_cancelled(slot: _Slot) -> None:
+            """Reclaim lanes whose query was cancelled since dispatch:
+            the lane frees (dirty — its mask is garbage to everyone
+            else) and the state's live-lane count drops so ``done``
+            can resolve without result feedback."""
+            for li in range(W):
+                lane = slot.lanes[li]
+                if lane is not None and lane[0].cancelled:
+                    lane[0].live_rows -= 1
+                    slot.lanes[li] = None
+                    slot.dirty.add(li)
+
         def assemble(slot: _Slot) -> None:
             """Claim ready cells into free lanes and refill their masks."""
             refill()
+            release_cancelled(slot)
             for li in range(W):
                 if slot.lanes[li] is not None:
                     continue
@@ -252,6 +285,14 @@ class WavePipeline:
                 if lane is None:
                     continue
                 s, row = lane
+                if s.cancelled:
+                    # cancelled mid-step: reclaim the lane, discard the
+                    # result (no feedback — the query is already resolved
+                    # as timed out / cancelled by the service)
+                    s.live_rows -= 1
+                    slot.lanes[li] = None
+                    slot.dirty.add(li)
+                    continue
                 keep = s.retire(row, int(lo[li]), int(hi[li]), int(ne[li]),
                                 packed[li].copy(),
                                 lambda li=li: res.alive[li])

@@ -1,0 +1,135 @@
+"""Seeded fault injection for the TCQ serving stack (chaos harness).
+
+Faults are injected at the *wave-step seam*: every engine backend — fused
+Pallas kernel, XLA composite, numpy oracle — is a step closure with the
+same signature, and the degradation ladder
+(:class:`repro.core.wave.DegradationLadder`) already wraps each rung via
+``ResilienceConfig.rung_wrapper``.  :func:`rung_faults` builds such a
+wrapper from per-rung :class:`FaultPlan`\\ s, so a chaos scenario is just
+an engine constructed with ``resilience=ResilienceConfig(rung_wrapper=
+rung_faults({"pallas": FaultPlan(fail_at=(0,))}))`` — no test-only hooks
+inside the engine itself.
+
+Everything is keyed by a deterministic per-rung *call counter* (never
+wall clock or RNG state shared with the engine), so a scenario replays
+bit-identically: the same calls fail, stall, or corrupt on every run.
+
+Fault classes:
+
+* ``fail_at`` — the step raises :class:`KernelFault` (models a compile
+  failure, an XLA runtime abort, a device OOM).  The ladder demotes to
+  the next rung and replays the same inputs.
+* ``slow_at`` — the step sleeps ``delay_s`` before running (models a
+  straggler lane / a thermally throttled device).  Results are
+  unaffected; only latency moves.
+* ``corrupt_at`` — the step's result comes back with the alive-mask of
+  every lane flipped at ``corrupt_vertex`` (models silent data
+  corruption).  The ladder's sampled oracle tripwire is the only thing
+  standing between this and a wrong answer.
+
+:func:`malformed_batches` supplies ingest batches that must be rejected
+by ``TemporalGraph``'s validation (:class:`~repro.core.graph.
+GraphIngestError`) without perturbing the graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+
+class KernelFault(RuntimeError):
+    """Injected kernel failure (stands in for compile/runtime/OOM errors)."""
+
+
+# ---------------------------------------------------------------- fault plan
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault schedule for one ladder rung, keyed by the
+    rung's 0-based call counter."""
+
+    fail_at: Tuple[int, ...] = ()       # calls that raise KernelFault
+    slow_at: Tuple[int, ...] = ()       # calls delayed by ``delay_s``
+    corrupt_at: Tuple[int, ...] = ()    # calls whose alive-mask is flipped
+    delay_s: float = 0.05
+    corrupt_vertex: int = 0
+
+
+class FaultyStep:
+    """Wrap a wave step closure with a :class:`FaultPlan`.
+
+    Transparent otherwise: attribute reads (``backend``, ``interpret``,
+    ``events``) fall through to the wrapped step, so the ladder — and the
+    engine's logging — see the rung they expect.
+    """
+
+    def __init__(self, fn: Callable, plan: FaultPlan):
+        self._fn = fn
+        self._plan = plan
+        self.calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self._fn, name)
+
+    def __call__(self, *args, **kwargs):
+        i = self.calls
+        self.calls += 1
+        plan = self._plan
+        if i in plan.fail_at:
+            raise KernelFault(f"injected kernel failure (call {i})")
+        if i in plan.slow_at:
+            time.sleep(plan.delay_s)
+        res = self._fn(*args, **kwargs)
+        if i in plan.corrupt_at:
+            vtx = plan.corrupt_vertex
+            # flip every lane's alive bit at one vertex: guaranteed to
+            # differ from truth whichever lane the tripwire samples
+            res = res._replace(
+                alive=res.alive.at[:, vtx].set(~res.alive[:, vtx]))
+        return res
+
+
+def rung_faults(plans: Mapping[str, FaultPlan]
+                ) -> Callable[[str, Callable], Callable]:
+    """``ResilienceConfig.rung_wrapper`` injecting per-rung fault plans.
+
+    ``plans`` maps rung names (``"pallas"``, ``"xla"``, ``"oracle"``) to
+    their schedules; unplanned rungs pass through unwrapped.  Injecting
+    into ``"oracle"`` is allowed but note the ladder re-raises once its
+    last rung fails.
+    """
+    def wrapper(name: str, fn: Callable) -> Callable:
+        plan = plans.get(name)
+        return fn if plan is None else FaultyStep(fn, plan)
+    return wrapper
+
+
+# ---------------------------------------------------------- malformed ingest
+def malformed_batches(seed: int = 0
+                      ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Ingest batches that ``TemporalGraph.add_edges`` must reject with
+    :class:`~repro.core.graph.GraphIngestError` — one per validation
+    class, seeded order."""
+    i32 = np.iinfo(np.int32)
+    batches = [
+        # negative vertex id
+        (np.array([-1, 2]), np.array([3, 4]), np.array([5, 6])),
+        # fractional float id
+        (np.array([1.5, 2.0]), np.array([3.0, 4.0]), np.array([5.0, 6.0])),
+        # NaN timestamp
+        (np.array([1, 2]), np.array([3, 4]), np.array([np.nan, 6.0])),
+        # shape mismatch
+        (np.array([1, 2, 3]), np.array([3, 4]), np.array([5, 6])),
+        # id overflows the int32 pair-key packing
+        (np.array([1 << 40, 2]), np.array([3, 4]), np.array([5, 6])),
+        # timestamp collides with the int32-min padding sentinel
+        (np.array([1, 2]), np.array([3, 4]), np.array([i32.min, 6])),
+        # non-numeric dtype
+        (np.array(["a", "b"]), np.array([3, 4]), np.array([5, 6])),
+    ]
+    rng = np.random.default_rng(seed)
+    rng.shuffle(batches)
+    return batches

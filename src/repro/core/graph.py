@@ -35,6 +35,88 @@ from typing import Dict, NamedTuple, Optional
 import numpy as np
 
 _I32_MIN = np.iinfo(np.int32).min
+_I32_MAX = np.iinfo(np.int32).max
+
+
+class GraphIngestError(ValueError):
+    """A malformed edge batch was rejected before touching the TEL.
+
+    The canonical ArrayTEL layout has hard representational invariants —
+    vertex ids pack into ``(lo << 32) | hi`` 64-bit pair keys, timestamps
+    and ids are stored int32, and the merge-append's composite sort key
+    biases timestamps by ``int32 min`` — so NaN, fractional, negative-id
+    or out-of-int32 inputs would not fail loudly: they would silently
+    corrupt the sort invariant every engine and cache is built on.
+    ``from_edges``/``add_edges`` raise this instead.
+    """
+
+
+def _validate_edge_batch(u, v, t, *, strict: bool = False,
+                         num_vertices: Optional[int] = None):
+    """Validate and canonicalize one (u, v, t) batch to int64 1-D arrays.
+
+    Always rejected (these silently corrupt the TEL otherwise): non-numeric
+    or non-finite values, fractional values, negative vertex ids, ids or
+    timestamps outside the int32 range (ids must also leave the pair-key
+    packing unambiguous), a timestamp equal to the ``int32 min`` sentinel,
+    and — when ``num_vertices`` is given — ids >= num_vertices.
+
+    ``strict=True`` additionally rejects self-loops and negative
+    timestamps; by default both are legal (self-loops are dropped — they
+    never contribute to distinct-neighbour degree — and late/negative
+    timestamps are an explicitly supported streaming regime).
+    """
+    cols = []
+    for name, col in (("u", u), ("v", v), ("t", t)):
+        a = np.asarray(col)
+        if a.dtype == object or not (
+                np.issubdtype(a.dtype, np.integer)
+                or np.issubdtype(a.dtype, np.floating)
+                or np.issubdtype(a.dtype, np.bool_)):
+            raise GraphIngestError(
+                f"edge batch column {name!r} has non-numeric dtype "
+                f"{a.dtype}")
+        if np.issubdtype(a.dtype, np.floating):
+            if not np.all(np.isfinite(a)):
+                raise GraphIngestError(
+                    f"edge batch column {name!r} contains NaN/inf")
+            if a.size and np.any(a != np.floor(a)):
+                raise GraphIngestError(
+                    f"edge batch column {name!r} contains fractional "
+                    "values")
+        cols.append(a.astype(np.int64).ravel())
+    u64, v64, t64 = cols
+    if not (u64.shape == v64.shape == t64.shape):
+        raise GraphIngestError("u, v, t must have identical shapes")
+    for name, a in (("u", u64), ("v", v64)):
+        if a.size and int(a.min()) < 0:
+            raise GraphIngestError(
+                f"edge batch column {name!r} contains negative vertex ids")
+        if a.size and int(a.max()) > _I32_MAX:
+            raise GraphIngestError(
+                f"edge batch column {name!r} exceeds the int32 id range")
+    if num_vertices is not None and u64.size:
+        mx = max(int(u64.max()), int(v64.max()))
+        if mx >= int(num_vertices):
+            raise GraphIngestError(
+                f"vertex id {mx} out of range for num_vertices="
+                f"{int(num_vertices)}")
+    if t64.size:
+        # t == int32 min is the capacity-padding sentinel (outside every
+        # representable window); a real edge carrying it would be dropped
+        # by the window masks as if it were padding
+        if int(t64.min()) <= _I32_MIN or int(t64.max()) > _I32_MAX:
+            raise GraphIngestError(
+                "edge batch timestamps outside the representable int32 "
+                "range (int32 min is reserved as the padding sentinel)")
+    if strict:
+        if np.any(u64 == v64):
+            raise GraphIngestError("edge batch contains self-loops "
+                                   "(strict ingest)")
+        if t64.size and int(t64.min()) < 0:
+            raise GraphIngestError("edge batch contains negative "
+                                   "timestamps (strict ingest)")
+    return u64, v64, t64
 
 
 def pow2_capacity(n: int, floor: int = 128) -> int:
@@ -118,18 +200,23 @@ class TemporalGraph:
 
     # ------------------------------------------------------------------ build
     @staticmethod
-    def from_edges(u, v, t, num_vertices: Optional[int] = None) -> "TemporalGraph":
+    def from_edges(u, v, t, num_vertices: Optional[int] = None, *,
+                   strict: bool = False) -> "TemporalGraph":
         """Build from parallel arrays of (u, v, t) temporal edges.
 
         Self loops are dropped (they never contribute to distinct-neighbour
         degree).  Endpoints are normalized to u < v for pair identity — the
         graph is undirected, matching the paper's data model.
+
+        Malformed batches raise :class:`GraphIngestError` instead of
+        silently corrupting the TEL sort invariant: NaN/fractional values,
+        negative or out-of-int32 vertex ids, ids >= an explicit
+        ``num_vertices``, and timestamps outside int32 are always
+        rejected; ``strict=True`` additionally rejects self-loops and
+        negative timestamps.
         """
-        u = np.asarray(u, dtype=np.int64)
-        v = np.asarray(v, dtype=np.int64)
-        t = np.asarray(t, dtype=np.int64)
-        if not (u.shape == v.shape == t.shape):
-            raise ValueError("u, v, t must have identical shapes")
+        u, v, t = _validate_edge_batch(u, v, t, strict=strict,
+                                       num_vertices=num_vertices)
         keep = u != v
         u, v, t = u[keep], v[keep], t[keep]
         lo = np.minimum(u, v)
@@ -170,7 +257,7 @@ class TemporalGraph:
         return TemporalGraph.from_edges(arr[:, 0], arr[:, 1], arr[:, 2], num_vertices)
 
     # --------------------------------------------------------------- dynamic
-    def add_edges(self, u, v, t) -> "TemporalGraph":
+    def add_edges(self, u, v, t, *, strict: bool = False) -> "TemporalGraph":
         """Dynamic-graph extension (paper §6.1): incremental merge-append.
 
         The paper appends one edge in O(1) by pointer surgery; the array
@@ -182,12 +269,12 @@ class TemporalGraph:
         pair factorization), with ``epoch`` bumped by one.  Timestamps may
         be arbitrary (late data is allowed — stricter than the paper, which
         assumes monotone arrival), and new vertices/pairs may appear.
+
+        Malformed batches raise :class:`GraphIngestError` (see
+        :meth:`from_edges`); ``strict=True`` additionally rejects
+        self-loops and negative timestamps.
         """
-        u = np.asarray(u, dtype=np.int64).ravel()
-        v = np.asarray(v, dtype=np.int64).ravel()
-        t = np.asarray(t, dtype=np.int64).ravel()
-        if not (u.shape == v.shape == t.shape):
-            raise ValueError("u, v, t must have identical shapes")
+        u, v, t = _validate_edge_batch(u, v, t, strict=strict)
         keep = u != v                       # self loops never contribute
         u, v, t = u[keep], v[keep], t[keep]
         if u.size == 0:
@@ -325,3 +412,33 @@ class TemporalGraph:
         per_edge = 4 * 4 + 4  # src,dst,t,pair_id + time_perm
         per_pair = 4 * 2 + 4 * 2 * 2  # pair_u/v + half pairs (src,pair)x2
         return self.num_edges * per_edge + self.num_pairs * per_pair
+
+    # ----------------------------------------------------------- persistence
+    _STATE_ARRAYS = ("src", "dst", "t", "pair_id", "pair_u", "pair_v",
+                     "unique_ts")
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Serializable snapshot: the canonical arrays plus scalars as 0-d
+        arrays — a flat str->ndarray mapping ``np.savez`` accepts directly.
+        Round-trips exactly through :meth:`from_state` (the crash-recovery
+        gate: a restored graph is bit-identical, epoch included)."""
+        d = {name: np.asarray(getattr(self, name))
+             for name in self._STATE_ARRAYS}
+        d["num_vertices"] = np.int64(self.num_vertices)
+        d["epoch"] = np.int64(self.epoch)
+        return d
+
+    @staticmethod
+    def from_state(state) -> "TemporalGraph":
+        """Inverse of :meth:`state_dict` (accepts an ``np.load`` mapping)."""
+        return TemporalGraph(
+            src=np.asarray(state["src"], np.int32),
+            dst=np.asarray(state["dst"], np.int32),
+            t=np.asarray(state["t"], np.int32),
+            pair_id=np.asarray(state["pair_id"], np.int32),
+            pair_u=np.asarray(state["pair_u"], np.int32),
+            pair_v=np.asarray(state["pair_v"], np.int32),
+            num_vertices=int(state["num_vertices"]),
+            unique_ts=np.asarray(state["unique_ts"], np.int32),
+            epoch=int(state["epoch"]),
+        )

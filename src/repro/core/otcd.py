@@ -122,11 +122,23 @@ class TCQEngine:
     """
 
     def __init__(self, graph: TemporalGraph, degree_fn=None, *,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 resilience=None):
         from repro.kernels.segdeg.ops import on_tpu
+        from repro.core.wave import ResilienceConfig
 
         self._degree_fn = degree_fn
         self._use_kernel = on_tpu() if use_kernel is None else use_kernel
+        # resilience=True (or a ResilienceConfig) pins a degradation
+        # ladder (Pallas -> XLA -> numpy oracle; demotion on VMEM/compile
+        # failure or a sampled divergence tripwire) as every window's
+        # step_fn instead of the single-lowering dispatch.  Ladder rungs
+        # never donate the lane buffer (failed calls replay one rung
+        # down bit-identically), so resilient mode trades the donated
+        # in-place lane update for fault containment.
+        if resilience is True:
+            resilience = ResilienceConfig()
+        self._resilience: Optional[ResilienceConfig] = resilience or None
         self.epoch = 0
         # (epoch, Ts, Te) -> WindowTEL, LRU
         self._win_cache: "OrderedDict[Tuple[int, int, int], WindowTEL]" = \
@@ -224,6 +236,55 @@ class TCQEngine:
         self._remember_aux(epoch, aux)
         return aux
 
+    def retire_epochs(self, live_epochs) -> int:
+        """Evict window-TEL and pair-table cache entries for epochs no
+        longer pinned by any in-flight or pending ticket.
+
+        The window LRU is size-bounded but not epoch-aware: a retired
+        epoch's WindowTELs (device edge buffers + pinned closures) used
+        to sit in the cache pinning device memory until capacity eviction
+        pushed them out.  The streaming service calls this after every
+        pool with the set of epochs still pinned; the engine's current
+        epoch is always kept.  Returns the number of evicted entries.
+        """
+        live = {int(e) for e in live_epochs}
+        live.add(self.epoch)
+        dead_w = [k for k in self._win_cache if k[0] not in live]
+        for k in dead_w:
+            del self._win_cache[k]
+        dead_a = [e for e in self._epoch_aux if e not in live]
+        for e in dead_a:
+            del self._epoch_aux[e]
+        return len(dead_w) + len(dead_a)
+
+    def rebase_epoch(self, epoch: int) -> None:
+        """Re-key the engine's current snapshot under an externally
+        dictated epoch number (crash recovery: a restored service resumes
+        its pre-crash epoch numbering, so re-admitted tickets' pinned
+        epochs stay meaningful and later pushes continue the sequence)."""
+        epoch = int(epoch)
+        if epoch == self.epoch:
+            return
+        aux = self._epoch_aux.pop(self.epoch)
+        moved = [(k, v) for k, v in self._win_cache.items()
+                 if k[0] == self.epoch]
+        for k, _ in moved:
+            del self._win_cache[k]
+        self.epoch = epoch
+        self._epoch_aux[epoch] = aux
+        for (_, ts, te), v in moved:
+            self._win_cache[(epoch, ts, te)] = v
+
+    def resilience_events(self) -> List[Dict]:
+        """Degradation events (demotions, unavailable rungs) across every
+        live window ladder, most recent windows last.  Empty when the
+        engine was built without ``resilience``."""
+        out: List[Dict] = []
+        for (ep, ts, te), wt in self._win_cache.items():
+            for ev in getattr(wt.step_fn, "events", ()):
+                out.append({"epoch": ep, "window": (ts, te), **ev})
+        return out
+
     # -------------------------------------------------------- window slicing
     def _window_tel(self, Ts: int, Te: int, *,
                     graph: Optional[TemporalGraph] = None,
@@ -258,12 +319,14 @@ class TCQEngine:
         aux = self._aux_for(ep, g)
         idx = np.flatnonzero((g.t >= Ts) & (g.t <= Te))
         e = int(idx.size)
+        donate = self._resilience is None
         if ep == self.epoch and e >= g.num_edges:
             step = make_wave_step_fn(self.tel, self._v_cap,
                                      seg_pair=self._seg_pair,
                                      seg_vert=self._seg_vert,
                                      use_kernel=self._use_kernel,
-                                     donate=True)
+                                     donate=donate,
+                                     resilience=self._resilience)
             out = WindowTEL(self.tel, self._seg_pair, self._seg_vert,
                             self._v_cap, e, step)
         else:
@@ -304,7 +367,8 @@ class TCQEngine:
             step = make_wave_step_fn(tel, aux.v_cap, seg_pair=seg_pair,
                                      seg_vert=aux.seg_vert,
                                      use_kernel=self._use_kernel,
-                                     donate=True)
+                                     donate=donate,
+                                     resilience=self._resilience)
             out = WindowTEL(tel, seg_pair, aux.seg_vert, aux.v_cap, e, step)
         if len(self._win_cache) >= _WINDOW_CACHE_MAX:
             self._win_cache.popitem(last=False)     # evict least-recent

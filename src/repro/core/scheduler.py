@@ -103,13 +103,22 @@ class QueryState:
     """
 
     def __init__(self, uts: np.ndarray, k: int, h: int, prune: bool,
-                 stats: QueryStats, qid: int = 0):
+                 stats: QueryStats, qid: int = 0,
+                 deadline: float = float("inf"), priority: int = 0):
         self.qid = qid
         self.uts = np.asarray(uts)
         self.n = int(self.uts.size)
         self.k, self.h = int(k), int(h)
         self.prune = bool(prune)
         self.stats = stats
+        # EDF admission key: the lane pool claims cells from the state
+        # with the smallest (deadline, priority) first (scheduler ties
+        # fall back to round-robin).  inf deadline = best-effort.
+        self.deadline = float(deadline)
+        self.priority = int(priority)
+        # set by cancel(): the pool reclaims this query's lanes at the
+        # next assemble/retire instead of peeling them further
+        self.cancelled = False
         self.idx_of = {int(t): i for i, t in enumerate(self.uts)}
         self.pruned: Dict[int, IntervalSet] = defaultdict(IntervalSet)
         self.empty = EmptyStaircase()
@@ -129,6 +138,14 @@ class QueryState:
     @property
     def done(self) -> bool:
         return not self.pending and self.live_rows == 0
+
+    def cancel(self) -> None:
+        """Withdraw the query: drop every unclaimed cell and flag the
+        state so the lane pool frees its in-flight lanes (deadline
+        timeout / client cancellation).  Idempotent; ``done`` becomes
+        True once the pool has reclaimed the last live lane."""
+        self.cancelled = True
+        self.pending.clear()
 
     def claim(self) -> Optional[RowCursor]:
         """Next ready row cursor, or None when nothing is pending."""

@@ -41,6 +41,7 @@ arrivals and edge ingestion mid-flight.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -82,6 +83,13 @@ def cluster_windows(windows: Sequence[Tuple[int, int]],
 
 
 # -------------------------------------------------------------------- ticket
+#: terminal ticket statuses — ``done`` (full result), ``timeout`` (deadline
+#: passed; partial result of whatever cells completed), ``cancelled``
+#: (client withdrawal, same partial-result contract), ``shed`` (dropped by
+#: the frontend's load shedder before admission).
+TERMINAL_STATUSES = ("done", "timeout", "cancelled", "shed")
+
+
 @dataclasses.dataclass
 class TCQTicket:
     """One in-flight (or completed) service request.
@@ -90,6 +98,13 @@ class TCQTicket:
     result is computed over exactly those edges, regardless of ingestion
     that lands later.  ``uts`` is the snapshot's unique-timestamp slice
     for the window (the schedule's column space), fixed at submit time.
+
+    ``deadline`` is an *absolute* ``time.perf_counter()`` instant (None =
+    best-effort); ``priority`` breaks deadline ties, lower first.  The
+    pair drives both pool formation (EDF head-of-line) and in-pool lane
+    claiming (:class:`~repro.core.scheduler.QueryState`'s EDF key).
+    Lifecycle: ``queued`` → ``running`` → one of
+    :data:`TERMINAL_STATUSES`.
     """
 
     id: int
@@ -101,6 +116,9 @@ class TCQTicket:
     graph: TemporalGraph
     uts: np.ndarray
     submit_s: float
+    priority: int = 0
+    deadline: Optional[float] = None
+    status: str = "queued"
     admit_s: Optional[float] = None
     done_s: Optional[float] = None
     result: Optional[TCQResult] = None
@@ -108,7 +126,17 @@ class TCQTicket:
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        return self.status in TERMINAL_STATUSES
+
+    @property
+    def edf_key(self) -> Tuple[float, int, int]:
+        """Earliest-deadline-first ordering key (ties: priority, then
+        arrival order — (inf, 0, id) degenerates to exact FIFO)."""
+        d = self.deadline if self.deadline is not None else float("inf")
+        return (d, self.priority, self.id)
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -161,11 +189,13 @@ class TCQService:
                  engine: Optional[TCQEngine] = None,
                  wave="auto", depth: int = 2, cluster_gap: int = 0,
                  use_kernel: Optional[bool] = None,
-                 retain_snapshots: bool = True):
+                 retain_snapshots: bool = True,
+                 resilience=None):
         if engine is None:
             if graph is None:
                 raise ValueError("need a graph or an engine")
-            engine = TCQEngine(graph, use_kernel=use_kernel)
+            engine = TCQEngine(graph, use_kernel=use_kernel,
+                               resilience=resilience)
         self.engine = engine
         self.wave = wave
         self.depth = int(depth)
@@ -213,7 +243,9 @@ class TCQService:
         windows containing no snapshot timestamps).
 
         ``request`` is a mapping with ``k``, ``ts``, ``te`` and optional
-        ``h`` — the ``TCQRequestStream`` format.
+        ``h``, ``priority`` (lower runs first) and ``deadline_s``
+        (seconds from submission; the ticket is cancelled — with partial
+        results — once it passes) — the ``TCQRequestStream`` format.
         """
         r = dict(request)
         now = time.perf_counter()
@@ -221,14 +253,18 @@ class TCQService:
         uts = g.unique_ts
         uts = uts[(uts >= int(r["ts"])) & (uts <= int(r["te"]))]
         uts = uts.astype(np.int64)
+        dl = r.get("deadline_s")
         tk = TCQTicket(id=self._next_id, k=int(r["k"]),
                        h=int(r.get("h", 1)), ts=int(r["ts"]),
                        te=int(r["te"]), epoch=self.engine.epoch, graph=g,
-                       uts=uts, submit_s=now)
+                       uts=uts, submit_s=now,
+                       priority=int(r.get("priority", 0)),
+                       deadline=None if dl is None else now + float(dl))
         self._next_id += 1
         n = int(uts.size)
         if n == 0:
             tk.result = TCQResult([], QueryStats(n_timestamps=0))
+            tk.status = "done"
             tk.admit_s = tk.done_s = now
             tk.result.stats.wall_time_s = 0.0
             self._retire(tk)
@@ -241,11 +277,58 @@ class TCQService:
     def pending(self) -> int:
         return len(self._pending)
 
+    @property
+    def pending_tickets(self) -> Tuple[TCQTicket, ...]:
+        return tuple(self._pending)
+
+    # ------------------------------------------------- cancellation/deadlines
+    def cancel(self, tk: TCQTicket, *, status: str = "cancelled") -> bool:
+        """Withdraw a ticket (client cancel / deadline timeout / shed).
+
+        Queued tickets resolve immediately with an empty partial result;
+        a *running* ticket is flagged so the live pool reclaims its lanes
+        at the next wave and finalizes it with whatever cells already
+        completed.  False if the ticket had already resolved.
+        """
+        if tk.done:
+            return False
+        now = time.perf_counter()
+        tk.status = status
+        if tk.state is not None:
+            tk.state.cancel()           # pool frees its lanes mid-flight
+        if tk in self._pending:         # queued: resolve on the spot
+            self._pending.remove(tk)
+            self._resolve_unrun(tk, now)
+        return True
+
+    def _resolve_unrun(self, tk: TCQTicket, now: float) -> None:
+        """Terminal bookkeeping for a ticket cancelled before it ever
+        held a lane (no state to decode — empty partial result)."""
+        st = QueryStats(n_timestamps=int(tk.uts.size))
+        st.wall_time_s = now - tk.submit_s
+        tk.result = TCQResult([], st)
+        tk.done_s = now
+        self._retire(tk)
+        self._fresh.append(tk)          # handed back by the next pump()
+
+    def expire(self, now: Optional[float] = None) -> List[TCQTicket]:
+        """Time out every *queued* ticket past its deadline (running
+        tickets are swept by the live pool's admit hook).  Returns the
+        newly timed-out tickets."""
+        now = time.perf_counter() if now is None else now
+        hit = [tk for tk in self._pending if tk.expired(now)]
+        for tk in hit:
+            self.cancel(tk, status="timeout")
+        return hit
+
     # --------------------------------------------------------------- serving
     def _make_state(self, tk: TCQTicket) -> QueryState:
         n = int(tk.uts.size)
         stats = QueryStats(n_timestamps=n, cells_total=n * (n + 1) // 2)
-        tk.state = QueryState(tk.uts, tk.k, tk.h, True, stats, qid=tk.id)
+        dl = float("inf") if tk.deadline is None else tk.deadline
+        tk.state = QueryState(tk.uts, tk.k, tk.h, True, stats, qid=tk.id,
+                              deadline=dl, priority=tk.priority)
+        tk.status = "running"
         tk.admit_s = time.perf_counter()
         return tk.state
 
@@ -263,6 +346,8 @@ class TCQService:
         tk.result = TCQResult(list(cores.values()), st)
         tk.done_s = done_s
         st.wall_time_s = done_s - tk.submit_s
+        if tk.status not in TERMINAL_STATUSES:   # cancel/timeout keep theirs
+            tk.status = "done"
         self._retire(tk)
 
     def pump(self, poll: Optional[Callable[["TCQService"], None]] = None
@@ -281,12 +366,15 @@ class TCQService:
         """
         if poll is not None:
             poll(self)
+        self.expire()
         if not self._pending:
             fresh, self._fresh = self._fresh, []
             return fresh
-        # head-of-line epoch first: older snapshots drain before newer
-        # ones so pinned epochs (and their cached TELs) retire quickly
-        head = self._pending[0]
+        # EDF head-of-line: the most urgent (deadline, priority) ticket
+        # picks the pool; with no deadlines/priorities the key degenerates
+        # to arrival order, i.e. the old FIFO head — older snapshots drain
+        # first so pinned epochs (and their cached TELs) retire quickly
+        head = min(self._pending, key=lambda t: t.edf_key)
         epoch = head.epoch
         cand = [tk for tk in self._pending if tk.epoch == epoch]
         clusters = cluster_windows([tk.window for tk in cand],
@@ -314,11 +402,18 @@ class TCQService:
         def admit() -> List[QueryState]:
             if poll is not None:
                 poll(self)
-            # resolve members whose own schedule has fully drained —
-            # their latency must not absorb later admissions' work
             now = time.perf_counter()
+            self.expire(now)
             for tk in members:
-                if not tk.done and tk.state.done:
+                # deadline sweep over *running* members: flag the state so
+                # run_pool reclaims its lanes at this very wave boundary
+                if (tk.done_s is None and tk.status == "running"
+                        and tk.expired(now)):
+                    tk.status = "timeout"
+                    tk.state.cancel()
+                # resolve members whose own schedule has fully drained —
+                # their latency must not absorb later admissions' work
+                if tk.done_s is None and tk.state.done:
                     self._finalize(tk, wt.num_vertices, now)
             newly = []
             for tk in list(self._pending):
@@ -332,13 +427,15 @@ class TCQService:
         pipe.run_pool(states, pool_stats, admit=admit)
         done_s = time.perf_counter()
         for tk in members:
-            if not tk.done:
+            if tk.done_s is None:
                 self._finalize(tk, wt.num_vertices, done_s)
             # pool-wide counters land once the pool's totals are known
             # (the stats object is shared with the ticket's TCQResult)
             tk.result.stats.absorb_pool(pool_stats,
                                         window_edges=wt.window_edges,
                                         batch_size=len(members))
+        # drop window TELs / pair tables of epochs no ticket pins anymore
+        self.engine.retire_epochs({t.epoch for t in self._pending})
         fresh, self._fresh = self._fresh, []
         self.pool_log.append({
             "epoch": epoch, "window": (pool_lo, pool_hi),
@@ -347,6 +444,9 @@ class TCQService:
             "window_edges": wt.window_edges,
             "device_steps": pool_stats.device_steps,
             "occupancy": pool_stats.occupancy,
+            "timeouts": sum(tk.status == "timeout" for tk in members),
+            "cancelled": sum(tk.status == "cancelled" for tk in members),
+            "backend": getattr(wt.step_fn, "backend", "?"),
             "wall_s": done_s - t0,
         })
         return members + fresh
@@ -363,3 +463,99 @@ class TCQService:
             served.extend(out)
             if not out and not self._pending:
                 return served
+
+    # ------------------------------------------------------- crash recovery
+    def snapshot(self) -> Dict:
+        """Serializable service state: engine epoch, every epoch snapshot
+        still pinned by a queued ticket, and the queued tickets themselves
+        (deadlines stored as *remaining* seconds — wall-clock restarts).
+
+        Pools run synchronously inside :meth:`pump`, so between pumps the
+        queue is the complete in-flight set; restoring a snapshot and
+        draining it yields bit-identical results to never having stopped
+        (resolved tickets are the driver's to persist — they are not part
+        of service state).
+        """
+        now = time.perf_counter()
+        graphs: Dict[int, Dict] = {self.engine.epoch:
+                                   self.engine.graph.state_dict()}
+        for tk in self._pending:
+            if tk.epoch not in graphs:
+                graphs[tk.epoch] = tk.graph.state_dict()
+        return {
+            "version": 1,
+            "epoch": int(self.engine.epoch),
+            "next_id": int(self._next_id),
+            "wave": self.wave,
+            "depth": self.depth,
+            "cluster_gap": self.cluster_gap,
+            "graphs": graphs,
+            "tickets": [{
+                "id": tk.id, "k": tk.k, "h": tk.h,
+                "ts": tk.ts, "te": tk.te,
+                "epoch": tk.epoch, "priority": tk.priority,
+                "deadline_rem_s": (None if tk.deadline is None
+                                   else tk.deadline - now),
+            } for tk in self._pending],
+        }
+
+    @classmethod
+    def restore(cls, snap: Dict, **kwargs) -> "TCQService":
+        """Rebuild a service from :meth:`snapshot`: replays the pinned
+        epoch snapshots oldest-first (re-keying the engine to the original
+        epoch numbers) and re-admits every queued ticket under its
+        original id, epoch pin, priority and remaining deadline."""
+        if int(snap.get("version", -1)) != 1:
+            raise ValueError(f"unknown snapshot version: "
+                             f"{snap.get('version')!r}")
+        graphs = {int(e): TemporalGraph.from_state(s)
+                  for e, s in snap["graphs"].items()}
+        epochs = sorted(graphs)
+        kwargs.setdefault("wave", snap["wave"])
+        kwargs.setdefault("depth", int(snap["depth"]))
+        kwargs.setdefault("cluster_gap", int(snap["cluster_gap"]))
+        svc = cls(graphs[epochs[0]], **kwargs)
+        svc.engine.rebase_epoch(epochs[0])
+        for e in epochs[1:]:
+            svc.engine.update_graph(graphs[e])
+            svc.engine.rebase_epoch(e)
+        now = time.perf_counter()
+        for rec in snap["tickets"]:
+            ep = int(rec["epoch"])
+            g = graphs[ep]
+            uts = g.unique_ts
+            uts = uts[(uts >= int(rec["ts"])) & (uts <= int(rec["te"]))]
+            rem = rec.get("deadline_rem_s")
+            svc._pending.append(TCQTicket(
+                id=int(rec["id"]), k=int(rec["k"]), h=int(rec["h"]),
+                ts=int(rec["ts"]), te=int(rec["te"]), epoch=ep, graph=g,
+                uts=uts.astype(np.int64), submit_s=now,
+                priority=int(rec.get("priority", 0)),
+                deadline=None if rem is None else now + float(rem)))
+        svc._next_id = int(snap["next_id"])
+        return svc
+
+    def save_snapshot(self, path_or_file) -> None:
+        """Persist :meth:`snapshot` as a single ``.npz`` (graph arrays +
+        a JSON metadata record) — no pickle, loadable anywhere."""
+        snap = self.snapshot()
+        arrays = {}
+        for e, sd in snap.pop("graphs").items():
+            for name, arr in sd.items():
+                arrays[f"g{int(e)}__{name}"] = np.asarray(arr)
+        np.savez(path_or_file, meta=np.frombuffer(
+            json.dumps(snap).encode(), dtype=np.uint8), **arrays)
+
+    @classmethod
+    def load_snapshot(cls, path_or_file, **kwargs) -> "TCQService":
+        """Inverse of :meth:`save_snapshot`."""
+        with np.load(path_or_file, allow_pickle=False) as z:
+            snap = json.loads(bytes(z["meta"]).decode())
+            graphs: Dict[int, Dict] = {}
+            for key in z.files:
+                if key == "meta":
+                    continue
+                tag, name = key.split("__", 1)
+                graphs.setdefault(int(tag[1:]), {})[name] = z[key]
+        snap["graphs"] = graphs
+        return cls.restore(snap, **kwargs)

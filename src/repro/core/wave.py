@@ -29,6 +29,7 @@ engines.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import weakref
 from collections import OrderedDict
@@ -245,44 +246,10 @@ _wave_step_nodonate = functools.partial(
                               "seg_vert"))(_wave_step_impl)
 
 
-def make_wave_step_fn(tel: DeviceTEL, num_vertices: int, *,
-                      seg_pair=None, seg_vert=None,
-                      use_kernel: Optional[bool] = None,
-                      interpret: Optional[bool] = None,
-                      w_tile: int = 8, donate: bool = False,
-                      vmem_budget_bytes: Optional[int] = None):
-    """Build the device step for one TEL: ``step(alive, ts, te, k, h) ->
-    StepResult``, with ``.backend`` ("pallas" | "xla") and ``.interpret``
-    attributes.
-
-    use_kernel=True routes through the fused Pallas peel-to-fixpoint
-    kernel (interpret mode off-TPU unless ``interpret`` says otherwise);
-    False through the XLA composite; None (default) auto-dispatches —
-    compiled Pallas on TPU, XLA elsewhere.  A TEL whose VMEM working set
-    exceeds the kernel budget falls back to the composite (the window
-    truncation normally keeps E far below that).  ``donate=True`` donates
-    the alive buffer (the pipeline's persistent lane slab); leave False
-    when the caller reuses its buffer across calls.
-
-    The two lowerings are bit-identical — alive, packed words, TTI lo/hi,
-    edge counts and the iteration count all match exactly (seeded fuzz
-    gate in tests/test_kernels.py).
-    """
-    from repro.kernels.segdeg.ops import on_tpu
-
-    if use_kernel is None:
-        use_kernel = on_tpu()
-    if use_kernel:
-        from repro.kernels.wave_peel.ops import (DEFAULT_VMEM_BUDGET,
-                                                 make_fused_wave_step)
-
-        budget = (DEFAULT_VMEM_BUDGET if vmem_budget_bytes is None
-                  else int(vmem_budget_bytes))
-        fused = make_fused_wave_step(tel, num_vertices, w_tile=w_tile,
-                                     interpret=interpret, donate=donate,
-                                     vmem_budget_bytes=budget)
-        if fused is not None:
-            return fused
+def _make_xla_step(tel: DeviceTEL, num_vertices: int, *,
+                   seg_pair=None, seg_vert=None, donate: bool = False):
+    """The XLA-composite lowering as a ``make_wave_step_fn``-shaped
+    closure (also the degradation ladder's middle rung)."""
     if seg_pair is None or seg_vert is None:
         from repro.kernels.segdeg.ref import banded_segsum_ref
 
@@ -301,6 +268,285 @@ def make_wave_step_fn(tel: DeviceTEL, num_vertices: int, *,
     step.backend = "xla"
     step.interpret = False
     return step
+
+
+def make_oracle_step_fn(tel: DeviceTEL, num_vertices: int):
+    """Serial numpy reference step — the degradation ladder's last rung
+    and the divergence tripwire's ground truth.
+
+    Pure host-side numpy over host copies of the (possibly capacity- or
+    bucket-padded) TEL: no jit, no Pallas, no XLA — nothing left to
+    degrade to.  Bit-identical to the composite on every ``StepResult``
+    field including the shared iteration count: the loop mirrors the
+    composite's ``lax.while_loop`` (body runs while any lane changed, the
+    final iteration observes the fixpoint), the segment reductions mirror
+    the scatter paths' sentinel-drop semantics (``pair_id == P`` and
+    ``hp_src == V`` fall outside the bincount slice), and the bitmask
+    pack is the same LSB-first uint32 layout.
+    """
+    t = np.asarray(tel.t)
+    src = np.asarray(tel.src)
+    dst = np.asarray(tel.dst)
+    pair_id = np.asarray(tel.pair_id).astype(np.int64)
+    hp_src = np.asarray(tel.hp_src).astype(np.int64)
+    hp_pair = np.asarray(tel.hp_pair).astype(np.int64)
+    p_cap = int(tel.pair_u.shape[0])
+    v = int(num_vertices)
+    pw = packed_width(v)
+
+    def _lanes(x, w, dtype=np.int64):
+        return np.broadcast_to(np.asarray(x), (w,)).astype(dtype)
+
+    def step(alive, ts, te, k, h):
+        cur = np.array(np.asarray(alive), dtype=bool)
+        w = cur.shape[0]
+        ts_l, te_l = _lanes(ts, w), _lanes(te, w)
+        k_l, h_l = _lanes(k, w), _lanes(h, w)
+        win = (t[None, :] >= ts_l[:, None]) & (t[None, :] <= te_l[:, None])
+        it = 0
+        while True:
+            ea = win & cur[:, src] & cur[:, dst]
+            it += 1
+            new = np.empty_like(cur)
+            for li in range(w):
+                paircnt = np.bincount(pair_id[ea[li]],
+                                      minlength=p_cap + 1)[:p_cap]
+                contrib = (paircnt >= h_l[li])[hp_pair]
+                # sentinel halfpairs (hp_src == V) fall outside the slice,
+                # like the scatter reduction's out-of-range segment drop
+                deg = np.bincount(hp_src[contrib], minlength=v + 1)[:v]
+                new[li] = cur[li] & (deg >= k_l[li])
+            if np.array_equal(new, cur):
+                break
+            cur = new
+        n_edges = ea.sum(axis=1).astype(np.int32)
+        tti_lo = np.full(w, _I32_MAX, np.int32)
+        tti_hi = np.full(w, _I32_MIN, np.int32)
+        for li in range(w):
+            if n_edges[li]:
+                t_act = t[ea[li]]
+                tti_lo[li] = t_act.min()
+                tti_hi[li] = t_act.max()
+        pad = pw * 32 - v
+        bits = np.pad(cur, [(0, 0), (0, pad)])
+        packed = np.packbits(bits, axis=-1,
+                             bitorder="little").view("<u4")
+        return StepResult(jnp.asarray(cur), jnp.asarray(packed),
+                          jnp.asarray(tti_lo), jnp.asarray(tti_hi),
+                          jnp.asarray(n_edges), jnp.int32(it))
+
+    step.backend = "oracle"
+    step.interpret = False
+    return step
+
+
+# --------------------------------------------------- degradation ladder
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs for the graceful-degradation ladder (pass as
+    ``make_wave_step_fn(resilience=...)`` / ``TCQEngine(resilience=...)``).
+
+    tripwire_every:
+        Sample every Nth step call: recompute one random lane on the
+        numpy oracle and compare bit-for-bit; a divergence quarantines
+        the current rung and replays the call one rung down.  0 disables
+        the tripwire (errors still demote).
+    seed:
+        Seeds the tripwire's lane sampling (determinism for the chaos
+        harness).
+    interpret / vmem_budget_bytes:
+        Overrides for the Pallas rung's build (None = the dispatcher
+        defaults).
+    rung_wrapper:
+        ``wrapper(name, step_fn) -> step_fn`` applied to each rung at
+        build time — the fault-injection seam (``core/faultinject.py``).
+    """
+
+    tripwire_every: int = 64
+    seed: int = 0
+    interpret: Optional[bool] = None
+    vmem_budget_bytes: Optional[int] = None
+    rung_wrapper: Optional[Callable] = None
+
+
+class DegradationLadder:
+    """Graceful degradation across the step lowerings: fused Pallas ->
+    XLA composite -> serial numpy oracle.
+
+    Built like a step_fn, called like a step_fn.  Every rung is
+    *non-donating*, so when a rung fails — a build/compile error, a
+    raised fault, or a tripwire divergence — the same inputs replay on
+    the next rung bit-identically: demotion is invisible in the results,
+    it only shows up in ``events`` and latency.  A demoted rung is
+    quarantined for this ladder's lifetime (ladders are pinned per
+    ``(epoch, Ts, Te)`` window entry, so a quarantine lasts the epoch);
+    an unavailable Pallas rung (VMEM budget, build failure) starts the
+    ladder on the composite with the reason recorded.
+    """
+
+    def __init__(self, tel: DeviceTEL, num_vertices: int, *,
+                 seg_pair=None, seg_vert=None,
+                 use_kernel: bool = False,
+                 interpret: Optional[bool] = None,
+                 w_tile: int = 8,
+                 config: Optional[ResilienceConfig] = None):
+        self.config = config or ResilienceConfig()
+        self.events = []            # [{rung, reason, detail, call}]
+        self.calls = 0
+        self.rung = 0
+        self._rng = np.random.default_rng(self.config.seed)
+        if self.config.interpret is not None:
+            interpret = self.config.interpret
+        rungs = []
+        if use_kernel:
+            from repro.kernels.wave_peel.ops import (DEFAULT_VMEM_BUDGET,
+                                                     make_fused_wave_step)
+
+            budget = (DEFAULT_VMEM_BUDGET
+                      if self.config.vmem_budget_bytes is None
+                      else int(self.config.vmem_budget_bytes))
+            try:
+                fused = make_fused_wave_step(tel, num_vertices,
+                                             w_tile=w_tile,
+                                             interpret=interpret,
+                                             donate=False,
+                                             vmem_budget_bytes=budget)
+                if fused is None:
+                    self._log("pallas", "vmem_budget",
+                              f"budget={budget} bytes")
+                else:
+                    rungs.append(("pallas", fused))
+            except Exception as e:                   # pragma: no cover
+                self._log("pallas", "build_error", repr(e))
+        rungs.append(("xla", _make_xla_step(tel, num_vertices,
+                                            seg_pair=seg_pair,
+                                            seg_vert=seg_vert,
+                                            donate=False)))
+        oracle = make_oracle_step_fn(tel, num_vertices)
+        self._truth = oracle        # tripwire ground truth stays unwrapped
+        rungs.append(("oracle", oracle))
+        wrap = self.config.rung_wrapper
+        if wrap is not None:
+            rungs = [(name, wrap(name, fn) or fn) for name, fn in rungs]
+        self.rungs = rungs
+
+    def _log(self, rung: str, reason: str, detail: str = "") -> None:
+        self.events.append({"rung": rung, "reason": reason,
+                            "detail": detail, "call": self.calls})
+
+    @property
+    def backend(self) -> str:
+        return self.rungs[self.rung][0]
+
+    @property
+    def interpret(self) -> bool:
+        return bool(getattr(self.rungs[self.rung][1], "interpret", False))
+
+    def _demote(self, name: str, reason: str, detail: str = "") -> None:
+        self._log(name, reason, detail)
+        self.rung += 1
+
+    @staticmethod
+    def _lane_slice(x, lane: int, w: int) -> np.ndarray:
+        return np.broadcast_to(np.asarray(x), (w,))[lane:lane + 1]
+
+    def _lane_check(self, res: StepResult, alive, ts, te, k, h) -> bool:
+        """Sampled cross-check: one random lane recomputed on the oracle
+        (lanes are mathematically independent, so a single-lane oracle
+        run must match that lane of the wave exactly — except the shared
+        iteration count, which is a max over lanes)."""
+        w = int(res.alive.shape[0])
+        lane = int(self._rng.integers(w))
+        truth = self._truth(
+            np.asarray(alive)[lane:lane + 1],
+            self._lane_slice(ts, lane, w), self._lane_slice(te, lane, w),
+            self._lane_slice(k, lane, w), self._lane_slice(h, lane, w))
+        got = jax.device_get((res.alive[lane], res.packed[lane],
+                              res.tti_lo[lane], res.tti_hi[lane],
+                              res.n_edges[lane]))
+        want = jax.device_get((truth.alive[0], truth.packed[0],
+                               truth.tti_lo[0], truth.tti_hi[0],
+                               truth.n_edges[0]))
+        return all(np.array_equal(g, x) for g, x in zip(got, want))
+
+    def __call__(self, alive, ts, te, k, h) -> StepResult:
+        self.calls += 1
+        every = self.config.tripwire_every
+        check = bool(every) and self.calls % every == 0
+        while True:
+            name, fn = self.rungs[self.rung]
+            last = self.rung == len(self.rungs) - 1
+            try:
+                res = fn(alive, ts, te, k, h)
+            except Exception as e:
+                if last:
+                    raise
+                self._demote(name, "error", repr(e))
+                continue            # replay the same cells one rung down
+            if check and not last and not self._lane_check(
+                    res, alive, ts, te, k, h):
+                self._demote(name, "divergence", f"call {self.calls}")
+                continue            # quarantine + bit-identical replay
+            return res
+
+
+def make_wave_step_fn(tel: DeviceTEL, num_vertices: int, *,
+                      seg_pair=None, seg_vert=None,
+                      use_kernel: Optional[bool] = None,
+                      interpret: Optional[bool] = None,
+                      w_tile: int = 8, donate: bool = False,
+                      vmem_budget_bytes: Optional[int] = None,
+                      resilience: Optional[ResilienceConfig] = None):
+    """Build the device step for one TEL: ``step(alive, ts, te, k, h) ->
+    StepResult``, with ``.backend`` ("pallas" | "xla" | "oracle") and
+    ``.interpret`` attributes.
+
+    use_kernel=True routes through the fused Pallas peel-to-fixpoint
+    kernel (interpret mode off-TPU unless ``interpret`` says otherwise);
+    False through the XLA composite; None (default) auto-dispatches —
+    compiled Pallas on TPU, XLA elsewhere.  A TEL whose VMEM working set
+    exceeds the kernel budget falls back to the composite (the window
+    truncation normally keeps E far below that).  ``donate=True`` donates
+    the alive buffer (the pipeline's persistent lane slab); leave False
+    when the caller reuses its buffer across calls.
+
+    With ``resilience`` set, the returned step is a
+    :class:`DegradationLadder` over the same lowerings (Pallas -> XLA ->
+    numpy oracle) that demotes on build/VMEM failure, raised errors, or
+    a sampled divergence tripwire and replays failed calls on the next
+    rung bit-identically.  Ladder rungs never donate (``donate`` is
+    ignored): a replay needs its inputs intact.
+
+    The lowerings are bit-identical — alive, packed words, TTI lo/hi,
+    edge counts and the iteration count all match exactly (seeded fuzz
+    gates in tests/test_kernels.py and tests/test_resilience.py).
+    """
+    from repro.kernels.segdeg.ops import on_tpu
+
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if resilience is not None:
+        if resilience.vmem_budget_bytes is None and \
+                vmem_budget_bytes is not None:
+            resilience = dataclasses.replace(
+                resilience, vmem_budget_bytes=int(vmem_budget_bytes))
+        return DegradationLadder(tel, num_vertices, seg_pair=seg_pair,
+                                 seg_vert=seg_vert, use_kernel=use_kernel,
+                                 interpret=interpret, w_tile=w_tile,
+                                 config=resilience)
+    if use_kernel:
+        from repro.kernels.wave_peel.ops import (DEFAULT_VMEM_BUDGET,
+                                                 make_fused_wave_step)
+
+        budget = (DEFAULT_VMEM_BUDGET if vmem_budget_bytes is None
+                  else int(vmem_budget_bytes))
+        fused = make_fused_wave_step(tel, num_vertices, w_tile=w_tile,
+                                     interpret=interpret, donate=donate,
+                                     vmem_budget_bytes=budget)
+        if fused is not None:
+            return fused
+    return _make_xla_step(tel, num_vertices, seg_pair=seg_pair,
+                          seg_vert=seg_vert, donate=donate)
 
 
 def tcd_wave(tel: DeviceTEL, alive: jnp.ndarray, ts, te, k, h,

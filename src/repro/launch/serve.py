@@ -26,6 +26,136 @@ import time
 import numpy as np
 
 
+# -------------------------------------------------------------- backpressure
+class Backpressure:
+    """Admission control in front of ``TCQService.submit``: a bounded
+    request queue with a qps ceiling and a shed-oldest-past-deadline
+    policy.
+
+    ``offer`` is the only entry point — it either admits the request
+    (returning its ticket) or sheds it (returning None, counted).  Three
+    gates, in order:
+
+    1. **qps ceiling** — a token bucket refilled at ``qps_ceiling``
+       (burst = ``queue_cap``); an empty bucket sheds the arrival
+       outright (the HTTP-429 analogue).
+    2. **deadline stamping** — admitted requests without their own
+       ``deadline_s`` inherit ``deadline_s`` (None = best-effort).
+    3. **bounded queue** — when the service backlog is at ``queue_cap``,
+       queued tickets already past their deadline are timed out first
+       (shed-oldest-past-deadline: they could never answer in time, so
+       they yield their slot); if the backlog is still full, the arrival
+       itself is shed.
+
+    Shed rate = ``shed / offered`` — the closed-loop driver reports it
+    alongside latency percentiles, because under overload a low p99 is
+    meaningless without the fraction of traffic it was bought with.
+    """
+
+    def __init__(self, svc, *, queue_cap: int = 64,
+                 qps_ceiling: float = 0.0, deadline_s: float = 0.0):
+        self.svc = svc
+        self.queue_cap = int(queue_cap)
+        self.qps_ceiling = float(qps_ceiling or 0.0)
+        self.deadline_s = float(deadline_s or 0.0)
+        self.offered = 0
+        self.shed = 0
+        self.timeouts_swept = 0
+        self._tokens = float(queue_cap)
+        self._last = time.perf_counter()
+
+    def offer(self, request):
+        """Admit ``request`` or shed it; returns the ticket or None."""
+        self.offered += 1
+        now = time.perf_counter()
+        if self.qps_ceiling > 0.0:
+            self._tokens = min(float(self.queue_cap), self._tokens
+                               + (now - self._last) * self.qps_ceiling)
+            self._last = now
+            if self._tokens < 1.0:
+                self.shed += 1
+                return None
+            self._tokens -= 1.0
+        if self.svc.pending >= self.queue_cap:
+            self.timeouts_swept += len(self.svc.expire(now))
+            if self.svc.pending >= self.queue_cap:
+                self.shed += 1
+                return None
+        r = dict(request)
+        if self.deadline_s > 0.0:
+            r.setdefault("deadline_s", self.deadline_s)
+        return self.svc.submit(r)
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / max(1, self.offered)
+
+
+def serve_closed_loop(graph, requests, *, concurrency: int = 8,
+                      queue_cap: int = 16, qps_ceiling: float = 0.0,
+                      deadline_s: float = 0.0, wave="auto", depth: int = 2,
+                      cluster_gap: int = 0, resilience=None):
+    """Closed-loop driver: keep ``concurrency`` requests outstanding,
+    offering the next one the moment a slot frees — the standard way to
+    overload a service deterministically (offered load = concurrency /
+    service time, no arrival clock to race).  Requests flow through a
+    :class:`Backpressure` gate, so overload shows up as shed traffic and
+    deadline timeouts rather than an unbounded queue.
+
+    Returns ``(svc, tickets, report)`` where ``report`` carries offered /
+    shed / timeout counts, shed rate, completed-qps and p50/p95/p99
+    latency of *completed* requests.
+    """
+    from repro.core import TCQService
+
+    svc = TCQService(graph, wave=wave, depth=depth, cluster_gap=cluster_gap,
+                     retain_snapshots=False, resilience=resilience)
+    bp = Backpressure(svc, queue_cap=queue_cap, qps_ceiling=qps_ceiling,
+                      deadline_s=deadline_s)
+    queue = list(requests)
+    tickets = []
+    state = {"i": 0}
+
+    def outstanding() -> int:
+        return sum(1 for tk in tickets if not tk.done)
+
+    def poll(s):
+        # at most one offer per poll tick (pool formation / lanes
+        # freeing): the closed loop reacts to service progress instead
+        # of dumping its whole queue into the shedder in one burst
+        if state["i"] < len(queue) and outstanding() < concurrency:
+            tk = bp.offer(queue[state["i"]])
+            state["i"] += 1
+            if tk is not None:
+                tickets.append(tk)
+
+    t0 = time.perf_counter()
+    while True:
+        svc.run_until_idle(poll)
+        if state["i"] >= len(queue) and not svc.pending:
+            break
+        # shed-everything stall guard: let the token bucket refill
+        time.sleep(0.002)
+    wall = time.perf_counter() - t0
+
+    done = [tk for tk in tickets if tk.status == "done"]
+    lat = np.array([tk.latency_s for tk in done]) if done else np.array([0.0])
+    report = {
+        "offered": bp.offered,
+        "admitted": len(tickets),
+        "shed": bp.shed,
+        "shed_rate": bp.shed_rate,
+        "timeouts": sum(tk.status == "timeout" for tk in tickets),
+        "completed": len(done),
+        "qps": len(done) / wall if wall > 0 else 0.0,
+        "p50_ms": 1e3 * float(np.quantile(lat, .50)),
+        "p95_ms": 1e3 * float(np.quantile(lat, .95)),
+        "p99_ms": 1e3 * float(np.quantile(lat, .99)),
+        "wall_s": wall,
+    }
+    return svc, tickets, report
+
+
 def serve_stream(graph, requests, *, qps: float, ingest=None,
                  wave="auto", depth: int = 2, cluster_gap: int = 0,
                  warm: bool = True):
@@ -96,6 +226,24 @@ def main():
     ap.add_argument("--depth", type=int, default=2)
     ap.add_argument("--ingest-batches", type=int, default=4,
                     help="edge arrival batches streamed during serving")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds from submission; "
+                         "requests past it are timed out mid-pool with "
+                         "partial results (0 = best-effort, no deadline)")
+    ap.add_argument("--queue-cap", type=int, default=64,
+                    help="bounded admission queue depth; at capacity, "
+                         "queued requests past their deadline are shed "
+                         "first, then new arrivals are shed")
+    ap.add_argument("--qps-ceiling", type=float, default=0.0,
+                    help="admission rate ceiling (token bucket); arrivals "
+                         "above it are shed outright (0 = unlimited)")
+    ap.add_argument("--closed-loop", action="store_true",
+                    help="closed-loop driver: keep --concurrency requests "
+                         "outstanding (deterministic overload) instead of "
+                         "the open-loop arrival clock; reports shed rate "
+                         "alongside latency percentiles")
+    ap.add_argument("--concurrency", type=int, default=8,
+                    help="outstanding requests in --closed-loop mode")
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map engine on the local host mesh")
     ap.add_argument("--combine", default="rs_ag",
@@ -130,15 +278,35 @@ def main():
               f"{dt:.3f}s ({int(iters)} peel iterations)")
         return
 
+    wave = args.wave if args.wave == "auto" else int(args.wave)
+
+    if args.closed_loop:
+        reqs = list(TCQRequestStream(lo, hi, k=args.k,
+                                     span=max(64, args.span // 20),
+                                     seed=0).requests(args.requests))
+        svc, tickets, rep = serve_closed_loop(
+            g, reqs, concurrency=args.concurrency,
+            queue_cap=args.queue_cap, qps_ceiling=args.qps_ceiling,
+            deadline_s=args.deadline_s, wave=wave, depth=args.depth)
+        print(f"[serve] closed loop: {rep['offered']} offered, "
+              f"{rep['completed']} completed in {rep['wall_s']:.2f}s "
+              f"({rep['qps']:.2f} qps), {rep['shed']} shed "
+              f"(rate {rep['shed_rate']:.2%}), {rep['timeouts']} timeouts")
+        print(f"[serve] latency p50 {rep['p50_ms']:.1f} ms | "
+              f"p95 {rep['p95_ms']:.1f} ms | p99 {rep['p99_ms']:.1f} ms")
+        return
+
     reqs = list(TCQRequestStream(lo, hi, k=args.k,
                                  span=max(64, args.span // 20),
                                  seed=0).open_loop(args.requests, args.qps))
+    if args.deadline_s > 0.0:
+        for r in reqs:
+            r["deadline_s"] = args.deadline_s
     future = powerlaw_temporal(args.vertices, max(args.edges // 8, 64),
                                args.span // 4, seed=5)
     arrivals = ((u, v, t + hi) for u, v, t in
                 EdgeStream.replay(future, max(1, args.ingest_batches)))
 
-    wave = args.wave if args.wave == "auto" else int(args.wave)
     svc, served, wall = serve_stream(g, reqs, qps=args.qps, ingest=arrivals,
                                      wave=wave, depth=args.depth)
     lat = np.array([tk.latency_s for tk in served])
@@ -156,7 +324,8 @@ def main():
           f"p99 {1e3 * np.quantile(lat, .99):.1f} ms")
     print(f"[serve] {len(svc.pool_log)} pools, "
           f"mean occupancy {np.mean(occ) if occ else 0:.1f} cells/step, "
-          f"{mid} mid-flight admissions")
+          f"{mid} mid-flight admissions, "
+          f"{sum(tk.status == 'timeout' for tk in served)} deadline timeouts")
 
 
 if __name__ == "__main__":

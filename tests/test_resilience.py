@@ -1,0 +1,330 @@
+"""Fault-tolerance gates: degradation ladder, ingest validation, ticket
+deadlines/backpressure, and crash recovery.
+
+The load-bearing properties:
+
+1. **Ladder equivalence** — the numpy oracle step is bit-identical to
+   the XLA composite (alive, packed words, TTI, n_edges, iteration
+   count), so demotion never changes an answer, only who computes it.
+2. **Demotion correctness** — injected kernel failures, a starved VMEM
+   budget, and silent result corruption each demote to the next rung
+   and *replay the same inputs* bit-identically; a healthy ladder is
+   invisible (no events, same results).
+3. **Ingest validation** — malformed edge batches raise
+   ``GraphIngestError`` before any state mutates.
+4. **Deadlines and backpressure** — EDF ordering, terminal ticket
+   statuses, bounded-queue shedding.
+5. **Crash recovery** — snapshot → ``.npz`` → restore → drain equals
+   the uninterrupted run, ticket for ticket.
+"""
+
+import io
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GraphIngestError, ResilienceConfig, TCQEngine,
+                        TCQService, TemporalGraph)
+from repro.core.faultinject import (FaultPlan, KernelFault,
+                                    malformed_batches, rung_faults)
+from repro.core.wave import make_oracle_step_fn, make_wave_step_fn
+
+
+def random_graph(seed, n_v=20, n_e=140, max_t=16):
+    rng = np.random.default_rng(seed)
+    return TemporalGraph.from_edges(rng.integers(0, n_v, n_e),
+                                    rng.integers(0, n_v, n_e),
+                                    rng.integers(1, max_t + 1, n_e), n_v)
+
+
+def random_lanes(seed, g, w=4):
+    rng = np.random.default_rng(seed + 1000)
+    lo, hi = g.span
+    ts = rng.integers(lo, hi + 1, w).astype(np.int32)
+    te = np.minimum(ts + rng.integers(1, hi - lo + 1, w), hi).astype(np.int32)
+    k = rng.integers(1, 4, w).astype(np.int32)
+    h = rng.integers(1, 3, w).astype(np.int32)
+    alive = jnp.ones((w, g.num_vertices), jnp.bool_)
+    return alive, ts, te, k, h
+
+
+def assert_steps_equal(got, want, *, iters=True):
+    fields = ["alive", "packed", "tti_lo", "tti_hi", "n_edges"]
+    if iters:
+        fields.append("iters")
+    for f in fields:
+        a, b = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert np.array_equal(a, b), f
+
+
+def assert_same(got, want, ctx=""):
+    assert got.by_tti().keys() == want.by_tti().keys(), ctx
+    for key, cw in want.by_tti().items():
+        cg = got.by_tti()[key]
+        assert np.array_equal(cg.vertices, cw.vertices), (ctx, key)
+        assert cg.n_edges == cw.n_edges, (ctx, key)
+
+
+# --------------------------------------------------- oracle rung equivalence
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_oracle_step_matches_composite(seed):
+    g = random_graph(seed)
+    tel = g.device_tel()
+    comp = make_wave_step_fn(tel, g.num_vertices, use_kernel=False)
+    oracle = make_oracle_step_fn(tel, g.num_vertices)
+    assert oracle.backend == "oracle"
+    alive, ts, te, k, h = random_lanes(seed, g)
+    # bit-identical including the shared fixpoint iteration count
+    assert_steps_equal(oracle(alive, ts, te, k, h),
+                       comp(alive, ts, te, k, h))
+
+
+# ------------------------------------------------------- ladder transitions
+def _ladder(g, seed=0, **cfg_kw):
+    tel = g.device_tel()
+    cfg = ResilienceConfig(seed=seed, **cfg_kw)
+    step = make_wave_step_fn(tel, g.num_vertices,
+                             use_kernel=False, resilience=cfg)
+    ref = make_wave_step_fn(tel, g.num_vertices, use_kernel=False)
+    return step, ref
+
+
+def test_ladder_invisible_when_healthy():
+    g = random_graph(7)
+    step, ref = _ladder(g)
+    alive, ts, te, k, h = random_lanes(7, g)
+    assert_steps_equal(step(alive, ts, te, k, h), ref(alive, ts, te, k, h))
+    assert step.backend == "xla" and step.events == []
+
+
+def test_ladder_demotes_on_error_and_replays():
+    g = random_graph(8)
+    step, ref = _ladder(g, rung_wrapper=rung_faults(
+        {"xla": FaultPlan(fail_at=(0,))}))
+    alive, ts, te, k, h = random_lanes(8, g)
+    # call 0 raises inside the XLA rung; the ladder must return the
+    # oracle's answer for the *same* inputs
+    assert_steps_equal(step(alive, ts, te, k, h), ref(alive, ts, te, k, h))
+    assert step.backend == "oracle"
+    assert [e["reason"] for e in step.events] == ["error"]
+
+
+def test_ladder_vmem_budget_starves_pallas_rung():
+    g = random_graph(9)
+    tel = g.device_tel()
+    cfg = ResilienceConfig(interpret=False, vmem_budget_bytes=1)
+    step = make_wave_step_fn(tel, g.num_vertices, use_kernel=True,
+                             resilience=cfg)
+    ref = make_wave_step_fn(tel, g.num_vertices, use_kernel=False)
+    # the fused rung never built: ladder opens on XLA, with the event
+    assert step.backend == "xla"
+    assert [e["reason"] for e in step.events] == ["vmem_budget"]
+    alive, ts, te, k, h = random_lanes(9, g)
+    assert_steps_equal(step(alive, ts, te, k, h), ref(alive, ts, te, k, h))
+
+
+def test_ladder_tripwire_catches_silent_corruption():
+    g = random_graph(10)
+    step, ref = _ladder(g, tripwire_every=1, rung_wrapper=rung_faults(
+        {"xla": FaultPlan(corrupt_at=(0,), corrupt_vertex=3)}))
+    alive, ts, te, k, h = random_lanes(10, g)
+    # the corrupted result must never escape: sampled oracle cross-check
+    # trips, the rung is quarantined, the call replays on the oracle
+    assert_steps_equal(step(alive, ts, te, k, h), ref(alive, ts, te, k, h))
+    assert step.backend == "oracle"
+    assert [e["reason"] for e in step.events] == ["divergence"]
+
+
+def test_ladder_last_rung_failure_raises():
+    g = random_graph(11)
+    step, _ = _ladder(g, rung_wrapper=rung_faults(
+        {"xla": FaultPlan(fail_at=(0,)), "oracle": FaultPlan(fail_at=(0,))}))
+    alive, ts, te, k, h = random_lanes(11, g)
+    with pytest.raises(KernelFault):
+        step(alive, ts, te, k, h)
+
+
+# -------------------------------------------------------- ingest validation
+def test_malformed_batches_rejected_before_mutation():
+    g = random_graph(0)
+    want = {f: np.asarray(getattr(g, f)).copy()
+            for f in ("src", "dst", "t", "pair_id")}
+    for u, v, t in malformed_batches(0):
+        with pytest.raises(GraphIngestError):
+            g.add_edges(u, v, t)
+    for f, arr in want.items():
+        assert np.array_equal(np.asarray(getattr(g, f)), arr), f
+
+
+def test_from_edges_validates_too():
+    with pytest.raises(GraphIngestError):
+        TemporalGraph.from_edges([0, -2], [1, 3], [4, 5])
+    with pytest.raises(GraphIngestError):
+        TemporalGraph.from_edges([0, 1], [1, 3], [4.5, 5.0])
+    # vertex ids beyond a declared num_vertices are rejected
+    with pytest.raises(GraphIngestError):
+        TemporalGraph.from_edges([0, 9], [1, 3], [4, 5], num_vertices=5)
+
+
+def test_strict_mode_rejects_self_loops_and_negative_ts():
+    g = random_graph(1)
+    # lenient (default): self-loops silently dropped, negative ts kept
+    g2 = g.add_edges([3], [3], [5])
+    assert g2 is g
+    g3 = g.add_edges([1], [2], [-4])
+    assert g3.num_edges == g.num_edges + 1
+    # strict: both are ingest errors
+    with pytest.raises(GraphIngestError):
+        g.add_edges([3], [3], [5], strict=True)
+    with pytest.raises(GraphIngestError):
+        g.add_edges([1], [2], [-4], strict=True)
+
+
+def test_graph_state_dict_roundtrip():
+    g = random_graph(2).add_edges([0, 1], [2, 3], [30, 31])
+    g2 = TemporalGraph.from_state(g.state_dict())
+    for f in ("src", "dst", "t", "pair_id", "pair_u", "pair_v",
+              "unique_ts"):
+        a, b = np.asarray(getattr(g, f)), np.asarray(getattr(g2, f))
+        assert a.dtype == b.dtype and np.array_equal(a, b), f
+    assert g2.num_vertices == g.num_vertices and g2.epoch == g.epoch
+
+
+# -------------------------------------------------- deadlines / EDF / sheds
+def _requests(g, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    uts = np.asarray(g.unique_ts)
+    reqs = []
+    for _ in range(n):
+        i, j = sorted(rng.integers(0, uts.size, 2))
+        reqs.append({"k": int(rng.integers(1, 4)),
+                     "ts": int(uts[i]), "te": int(uts[min(j + 1, uts.size - 1)])})
+    return reqs
+
+
+def test_edf_serves_tight_deadline_first():
+    g = random_graph(3)
+    lo, hi = g.span
+    mid = (lo + hi) // 2
+    svc = TCQService(g)
+    slack = svc.submit({"k": 2, "ts": lo, "te": mid})
+    tight = svc.submit({"k": 2, "ts": mid + 1, "te": hi,
+                        "deadline_s": 60.0})
+    svc.pump()
+    assert tight.done and tight.status == "done"
+    assert not slack.done                   # disjoint window: next pool
+    svc.run_until_idle()
+    assert slack.status == "done"
+
+
+def test_cancel_and_timeout_are_terminal_with_partial_results():
+    g = random_graph(4)
+    lo, hi = g.span
+    svc = TCQService(g)
+    a = svc.submit({"k": 2, "ts": lo, "te": hi})
+    b = svc.submit({"k": 2, "ts": lo, "te": hi, "deadline_s": -1.0})
+    assert svc.cancel(a) and a.status == "cancelled" and a.done
+    assert a.result is not None and not svc.cancel(a)   # idempotent
+    svc.run_until_idle()
+    assert b.status == "timeout" and b.done and b.result is not None
+    assert svc.pending == 0
+
+
+def test_backpressure_bounded_queue_and_qps_ceiling():
+    from repro.launch.serve import Backpressure
+
+    g = random_graph(5)
+    lo, hi = g.span
+    req = {"k": 2, "ts": lo, "te": hi}
+    svc = TCQService(g)
+    bp = Backpressure(svc, queue_cap=2, deadline_s=30.0)
+    t1, t2 = bp.offer(req), bp.offer(req)
+    assert t1 is not None and t2 is not None
+    assert t1.deadline is not None          # stamped by the gate
+    assert bp.offer(req) is None            # queue full -> shed
+    assert bp.shed == 1 and bp.offered == 3
+    # a queued ticket past its deadline yields its slot to the arrival
+    t1.deadline = 0.0
+    t4 = bp.offer(req)
+    assert t4 is not None and t1.status == "timeout"
+
+    svc2 = TCQService(g)
+    bp2 = Backpressure(svc2, queue_cap=1, qps_ceiling=1e-6)
+    assert bp2.offer(req) is not None       # initial burst allowance
+    # bucket drained, refill is ~0 at this qps: everything else sheds
+    assert bp2.offer(req) is None and bp2.shed_rate == pytest.approx(0.5)
+
+
+# ----------------------------------------------------------- crash recovery
+@pytest.mark.parametrize("seed", [0, 1])
+def test_snapshot_restore_equals_uninterrupted(seed):
+    rng = np.random.default_rng(seed + 50)
+    g = random_graph(seed)
+    reqs = _requests(g, n=4, seed=seed)
+    extra_u = rng.integers(0, g.num_vertices, 12)
+    extra_v = rng.integers(0, g.num_vertices, 12)
+    extra_t = rng.integers(20, 30, 12)
+
+    # uninterrupted reference: submit, ingest, submit, drain
+    ref = TCQService(g)
+    ref_tks = [ref.submit(r) for r in reqs[:2]]
+    ref.push_edges(extra_u, extra_v, extra_t)
+    ref_tks += [ref.submit(r) for r in reqs[2:]]
+    ref.run_until_idle()
+
+    # crashed run: same traffic, pump once, snapshot through a real
+    # .npz byte stream, restore, drain the remainder
+    svc = TCQService(g)
+    tks = [svc.submit(r) for r in reqs[:2]]
+    svc.push_edges(extra_u, extra_v, extra_t)
+    tks += [svc.submit(r) for r in reqs[2:]]
+    early = svc.pump()
+    buf = io.BytesIO()
+    svc.save_snapshot(buf)
+    buf.seek(0)
+    svc2 = TCQService.load_snapshot(buf)
+    assert svc2.epoch == svc.epoch
+    late = svc2.run_until_idle()
+    by_id = {tk.id: tk for tk in early + late}
+    assert sorted(by_id) == sorted(tk.id for tk in ref_tks)
+    for want in ref_tks:
+        got = by_id[want.id]
+        assert got.epoch == want.epoch      # epoch pins survive restore
+        assert_same(got.result, want.result, ctx=f"ticket {want.id}")
+
+
+def test_restore_preserves_deadlines_and_ids():
+    g = random_graph(6)
+    lo, hi = g.span
+    svc = TCQService(g)
+    svc.submit({"k": 2, "ts": lo, "te": hi, "deadline_s": 120.0,
+                "priority": -3})
+    snap = svc.snapshot()
+    assert snap["tickets"][0]["deadline_rem_s"] == pytest.approx(120.0,
+                                                                 abs=5.0)
+    svc2 = TCQService.restore(snap)
+    (tk,) = svc2.pending_tickets
+    assert tk.id == 0 and tk.priority == -3 and tk.deadline is not None
+    nxt = svc2.submit({"k": 2, "ts": lo, "te": hi})
+    assert nxt.id == 1                      # id sequence continues
+
+
+# ------------------------------------------- resilient service end-to-end
+def test_service_with_injected_faults_matches_fault_free():
+    g = random_graph(12, n_v=24, n_e=200)
+    reqs = _requests(g, n=3, seed=12)
+    plain = TCQService(g)
+    want = [plain.submit(r) for r in reqs]
+    plain.run_until_idle()
+
+    cfg = ResilienceConfig(seed=12, tripwire_every=1,
+                           rung_wrapper=rung_faults(
+                               {"xla": FaultPlan(fail_at=(1,),
+                                                 corrupt_at=(0,))}))
+    svc = TCQService(g, resilience=cfg)
+    got = [svc.submit(r) for r in reqs]
+    svc.run_until_idle()
+    assert svc.engine.resilience_events(), "faults never fired"
+    for a, b in zip(got, want):
+        assert_same(a.result, b.result, ctx=f"ticket {a.id}")

@@ -318,3 +318,87 @@ def test_autotune_wave_accounts_for_ring_depth():
     # demand-bound regimes (small V*E) are depth-insensitive
     assert autotune_wave(30, 200, num_queries=1, depth=8) == \
         autotune_wave(30, 200, num_queries=1, depth=1)
+
+
+# ------------------------------------------------ ticket lifecycle edges
+def test_cancel_before_first_slot():
+    """A ticket cancelled while still queued never touches the pool: it
+    resolves immediately with an empty partial result, and its pool-mates
+    are served exactly as if it had never been submitted."""
+    g = random_graph(21, n_v=22, n_e=200, max_t=20)
+    Ts, Te = g.span
+    svc = TCQService(g, wave=4)
+    keep = svc.submit({"k": 2, "ts": Ts, "te": Te})
+    gone = svc.submit({"k": 3, "ts": Ts, "te": Te})
+    assert svc.cancel(gone)
+    assert gone.status == "cancelled" and gone.done
+    assert gone.result is not None and len(gone.result) == 0
+    served = svc.run_until_idle()
+    assert keep.status == "done"
+    # the cancelled ticket was handed back by pump(), not re-run
+    assert {tk.id for tk in served} == {keep.id, gone.id}
+    assert_same(keep.result, TCQEngine(g).query(2, Ts, Te), "survivor")
+
+
+def test_deadline_expires_mid_pool():
+    """A running ticket whose deadline passes mid-pool has its lanes
+    reclaimed at the next wave and resolves as ``timeout`` with whatever
+    cells had completed; pool-mates are unaffected."""
+    g = random_graph(22, n_v=22, n_e=200, max_t=20)
+    Ts, Te = g.span
+    svc = TCQService(g, wave=4)
+    keep = svc.submit({"k": 2, "ts": Ts, "te": Te})
+    # far-future deadline: admitted normally, expired deterministically
+    # by the poll below (wall-clock-free determinism)
+    doomed = svc.submit({"k": 3, "ts": Ts, "te": Te,
+                         "deadline_s": 3600.0})
+    state = {"polls": 0}
+
+    def poll(s):
+        state["polls"] += 1
+        if state["polls"] == 2:         # inside the live pool's admit hook
+            doomed.deadline = 1.0       # long past (perf_counter scale)
+
+    svc.run_until_idle(poll)
+    assert doomed.status == "timeout" and doomed.done
+    assert doomed.result is not None
+    assert keep.status == "done"
+    assert_same(keep.result, TCQEngine(g).query(2, Ts, Te), "survivor")
+    assert any(p["timeouts"] for p in svc.pool_log)
+
+
+def test_empty_result_query_races_ingest():
+    """A query whose window holds no snapshot timestamps resolves empty
+    at submit — and stays empty even when an ingest lands edges inside
+    that window before the next pump (epoch pinning for the degenerate
+    cell-free schedule)."""
+    g = random_graph(23, n_v=18, n_e=120, max_t=10)
+    Ts, Te = g.span
+    svc = TCQService(g, wave=4)
+    empty = svc.submit({"k": 2, "ts": Te + 5, "te": Te + 9})
+    assert empty.done and empty.status == "done" and len(empty.result) == 0
+    # the race: edges land inside [Te+5, Te+9] right after submission
+    svc.push_edges([0, 0, 1], [1, 2, 2], [Te + 6, Te + 7, Te + 8])
+    fresh = svc.submit({"k": 2, "ts": Te + 5, "te": Te + 9})
+    served = svc.run_until_idle()
+    assert {tk.id for tk in served} == {empty.id, fresh.id}
+    assert len(empty.result) == 0           # still pinned to epoch 0
+    assert_same(fresh.result, TCQEngine(svc.graph).query(2, Te + 5, Te + 9),
+                "post-ingest")
+
+
+def test_window_cache_retires_dead_epochs():
+    """Window TELs and pair tables of epochs no ticket pins anymore are
+    evicted after each pool instead of lingering until LRU capacity."""
+    g = random_graph(24, n_v=18, n_e=120, max_t=10)
+    Ts, Te = g.span
+    svc = TCQService(g, wave=4)
+    svc.submit({"k": 2, "ts": Ts, "te": Te})
+    svc.push_edges([0, 1], [2, 3], [Ts + 1, Ts + 2])
+    svc.submit({"k": 2, "ts": Ts, "te": Te})
+    svc.push_edges([2, 3], [4, 5], [Ts + 1, Ts + 2])
+    svc.submit({"k": 2, "ts": Ts, "te": Te})
+    svc.run_until_idle()
+    live = {svc.engine.epoch}
+    assert set(svc.engine._epoch_aux) <= live
+    assert {key[0] for key in svc.engine._win_cache} <= live
