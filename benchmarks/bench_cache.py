@@ -1,0 +1,165 @@
+"""TTI core-cache benchmark + regression gate.
+
+Measures what the cache is for: a *repeated-workload* stream (a small set
+of hot windows drawn under a Zipf schedule — the serving traffic shape
+that motivated the ROADMAP's cache item) served by a warm
+``TCQService`` (cache on, steady state) vs a cold one (cache off, every
+request recomputes).  Three gates, any failure raises (non-zero harness
+exit, same contract as the other gate benches):
+
+* **equivalence** — every warm-served request must be bit-identical
+  (``assert_cores_equal``) to the cold recomputation;
+* **speedup** — warm steady-state qps must be >= ``_SPEEDUP_FLOOR`` x
+  cold qps (5x full-size; relaxed in smoke where graphs are tiny and
+  constant overheads dominate);
+* **ingest bit-identity** — after >= 3 interleaved ``push_edges``
+  epochs (batches landing *inside* the hot windows, so incremental
+  invalidation actually fires), every ticket — cache-served or not —
+  must match a cold engine recomputed on the ticket's pinned snapshot.
+
+Hit-rate is also gated (>= ``_HIT_RATE_FLOOR`` on the steady-state pass)
+so a silently dead cache cannot pass on timing noise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (SMOKE, assert_cores_equal, emit, graph,
+                               pick_queries, timeit)
+
+GRAPH = "email"
+_N_DISTINCT = 4 if SMOKE else 8       # hot windows in the working set
+_ZIPF_TOTAL = 16 if SMOKE else 64     # requests per measured pass
+_SPEEDUP_FLOOR = 2.0 if SMOKE else 5.0
+_HIT_RATE_FLOOR = 0.5
+_INGEST_ROUNDS = 4                    # 3 appends interleave the serving
+
+
+def _zipf_schedule(seed: int = 0):
+    """The repeated workload: ``_N_DISTINCT`` valid hot windows, drawn
+    ``_ZIPF_TOTAL`` times under a Zipf(1.1) popularity law."""
+    distinct = pick_queries(GRAPH, _N_DISTINCT, seed=3)
+    if not distinct:
+        raise RuntimeError("no valid query windows found for cache bench")
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, len(distinct) + 1) ** 1.1
+    idx = rng.choice(len(distinct), size=_ZIPF_TOTAL, p=w / w.sum())
+    return distinct, [dict(distinct[i]) for i in idx]
+
+
+def _serve(svc, reqs):
+    tickets = [svc.submit({k: r[k] for k in ("k", "ts", "te")})
+               for r in reqs]
+    svc.run_until_idle()
+    return tickets
+
+
+def run():
+    from repro.core import TCQService
+
+    g = graph(GRAPH)
+    distinct, reqs = _zipf_schedule()
+    rows = []
+
+    cold = TCQService(g, use_kernel=False, cache=False)
+    warm = TCQService(g, use_kernel=False, cache=True)
+    # one untimed pass each: compiles programs on both and populates the
+    # warm cache, so the timed passes compare steady states
+    base_cold = _serve(cold, reqs)
+    base_warm = _serve(warm, reqs)
+    for tc, tw in zip(base_cold, base_warm):
+        assert_cores_equal(tw.result, tc.result,
+                           f"(cache warm-up, req #{tc.id})")
+
+    t_cold = timeit(lambda: _serve(cold, reqs), repeat=2)
+    probes0 = warm.stats["core_cache"]
+    tick_warm = []
+    t_warm = timeit(lambda: tick_warm.extend(_serve(warm, reqs)), repeat=2)
+    for tw, tc in zip(tick_warm, base_cold * 2):
+        assert_cores_equal(tw.result, tc.result,
+                           f"(cache steady state, req #{tc.id})")
+    probes1 = warm.stats["core_cache"]
+    d_hits = (probes1["hits"] + probes1["dominance_hits"]
+              - probes0["hits"] - probes0["dominance_hits"])
+    d_miss = probes1["misses"] - probes0["misses"]
+    hit_rate = d_hits / max(1, d_hits + d_miss)
+    speedup = t_cold / t_warm if t_warm > 0 else float("inf")
+
+    rows.append({"bench": "cache", "mode": "cold", "t_s": t_cold,
+                 "qps": len(reqs) / t_cold})
+    rows.append({"bench": "cache", "mode": "warm", "t_s": t_warm,
+                 "qps": len(reqs) / t_warm, "hit_rate": hit_rate})
+    gate_ok = speedup >= _SPEEDUP_FLOOR and hit_rate >= _HIT_RATE_FLOOR
+    rows.append({"bench": "cache_summary",
+                 "speedup_warm_vs_cold": speedup, "hit_rate": hit_rate,
+                 "distinct_windows": len(distinct),
+                 "requests_per_pass": len(reqs),
+                 "speedup_floor": _SPEEDUP_FLOOR, "gate_ok": gate_ok})
+    if not gate_ok:
+        raise RuntimeError(
+            f"cache gate: warm vs cold speedup {speedup:.2f}x "
+            f"(floor {_SPEEDUP_FLOOR}x) at hit rate {hit_rate:.2%} "
+            f"(floor {_HIT_RATE_FLOOR:.0%})")
+
+    rows.append(_run_ingest(distinct))
+    emit("bench_cache", rows)
+    return rows
+
+
+def _run_ingest(distinct):
+    """Warm-vs-recomputed bit-identity across interleaved ingest epochs.
+
+    Batches land *inside* the hot windows (timestamps drawn from each
+    round's target window), so entries genuinely invalidate — then every
+    ticket is checked against a cache-less engine on its pinned snapshot.
+    """
+    import time
+
+    from repro.core import TCQEngine, TCQService
+
+    g = graph(GRAPH)
+    rng = np.random.default_rng(11)
+    svc = TCQService(g, use_kernel=False, cache=True)   # pins snapshots
+    tickets = []
+    t0 = time.perf_counter()
+    for rnd in range(_INGEST_ROUNDS):
+        tickets += _serve(svc, distinct)
+        if rnd < _INGEST_ROUNDS - 1:
+            # append a batch inside one hot window: its cached cells must
+            # invalidate while disjoint windows carry to the new epoch
+            tgt = distinct[rnd % len(distinct)]
+            n = max(8, svc.graph.num_edges // 200)
+            u = rng.integers(0, svc.graph.num_vertices, size=n)
+            v = rng.integers(0, svc.graph.num_vertices, size=n)
+            t = rng.integers(tgt["ts"], tgt["te"] + 1, size=n)
+            svc.push_edges(u, v, t)
+    wall = time.perf_counter() - t0
+    if svc.epoch < 3:
+        raise RuntimeError(f"cache ingest gate: only {svc.epoch} epochs")
+    cc = svc.stats["core_cache"]
+    if cc["invalidated"] == 0:
+        raise RuntimeError("cache ingest gate: appends inside hot windows "
+                           "invalidated nothing — invalidation is dead")
+    # bit-identity of every (window, epoch) combination vs a cold engine
+    # recomputed on the ticket's pinned snapshot
+    seen = set()
+    for tk in tickets:
+        key = (tk.k, tk.h, tk.ts, tk.te, tk.epoch)
+        if key in seen:
+            continue
+        seen.add(key)
+        ref = TCQEngine(tk.graph, use_kernel=False).query(
+            tk.k, tk.ts, tk.te, h=tk.h, mode="wave")
+        assert_cores_equal(tk.result, ref,
+                           f"(ingest epoch {tk.epoch}, req #{tk.id})")
+    return {"bench": "cache_ingest", "t_s": wall,
+            "epochs": int(svc.epoch), "tickets": len(tickets),
+            "verified": len(seen), "invalidated": cc["invalidated"],
+            "rekeyed": cc["rekeyed"], "hits": cc["hits"],
+            "equivalent": True}
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 full JSON records under benchmarks/results/.  The wave-engine rows
 (bench_wave + its fused-kernel gate run_kernel + bench_pipeline +
-bench_service + bench_streaming) are additionally folded into the
+bench_service + bench_streaming + bench_cache) are additionally folded into the
 repo-root ``BENCH_wave.json`` so the wave-mode perf trajectory is
 tracked across PRs; bench_wave.run_kernel raises on fused-vs-composite
 bit divergence or a fused-cost regression, and bench_pipeline,
@@ -27,10 +27,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_chaos, bench_distribution, bench_k,
-                            bench_memory, bench_pipeline, bench_pruning,
-                            bench_queries, bench_service, bench_span,
-                            bench_streaming, bench_wave)
+    from benchmarks import (bench_cache, bench_chaos, bench_distribution,
+                            bench_k, bench_memory, bench_pipeline,
+                            bench_pruning, bench_queries, bench_service,
+                            bench_span, bench_streaming, bench_wave)
     from benchmarks.common import SMOKE
 
     print("name,us_per_call,derived")
@@ -195,6 +195,34 @@ def main() -> None:
         traceback.print_exc()
 
     try:
+        # cache gate: warm-vs-cold equivalence (bit-identity, including
+        # across interleaved ingest epochs), a warm-speedup floor and a
+        # hit-rate floor — the module raises on any violation, so a
+        # stale or dead cache fails the harness like a wrong core would
+        carows = bench_cache.run()
+        trajectory["cache"] = carows
+        for r in carows:
+            if r["bench"] == "cache":
+                extra = (f" hit_rate={r['hit_rate']:.2f}"
+                         if "hit_rate" in r else "")
+                row(f"cache/{r['mode']}", r["t_s"],
+                    f"qps={r['qps']:.2f}{extra}")
+            elif r["bench"] == "cache_ingest":
+                row("cache/ingest", r["t_s"],
+                    f"epochs={r['epochs']} verified={r['verified']} "
+                    f"invalidated={r['invalidated']} "
+                    f"rekeyed={r['rekeyed']} "
+                    f"equivalent={r['equivalent']}")
+            else:
+                row("cache/speedup", 0.0,
+                    f"warm_vs_cold={r['speedup_warm_vs_cold']:.2f}x "
+                    f"hit_rate={r['hit_rate']:.2%} "
+                    f"gate_ok={r['gate_ok']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
         # chaos gate: every fault scenario must stay bit-identical to
         # the fault-free run (the module raises otherwise), so injected
         # kernel failures / corruption / crashes fail the harness just
@@ -220,7 +248,7 @@ def main() -> None:
     # runs never overwrite the measured numbers)
     if not SMOKE and \
             {"wave", "kernel", "pipeline", "service",
-             "streaming", "chaos"} <= trajectory.keys():
+             "streaming", "cache", "chaos"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

@@ -7,6 +7,8 @@ Public API:
                        update_graph installs new epochs in place)
   TCQService         — continuous serving runtime: window-clustered lane
                        pools, mid-flight admission, epoch-pinned snapshots
+  CoreCache          — TTI-keyed core-result cache (cross-request reuse,
+                       incremental invalidation on ingest)
   temporal_kcore_query — one-shot convenience wrapper
   tcd / tcd_batch    — the TCD operation (truncate + frontier peel + TTI)
   brute_force_query  — oracle
@@ -14,6 +16,7 @@ Public API:
 """
 
 from repro.core.baseline import PHCIndex, iphc_query  # noqa: F401
+from repro.core.corecache import CacheView, CoreCache  # noqa: F401
 from repro.core.engine import (WavePipeline, pack_alive_u32,  # noqa: F401
                                unpack_alive_u32)
 from repro.core.graph import (DeviceTEL, GraphIngestError,  # noqa: F401

@@ -143,10 +143,12 @@ class WavePipeline:
         self._step = step_fn
 
     def run(self, uts: np.ndarray, k: int, h: int, prune: bool,
-            stats: QueryStats) -> Dict[Tuple[int, int], CoreResult]:
+            stats: QueryStats, cache=None
+            ) -> Dict[Tuple[int, int], CoreResult]:
         """Single-query entry: one QueryState, same stats object for both
-        the query's and the pool's counters."""
-        qs = QueryState(uts, k, h, prune, stats)
+        the query's and the pool's counters.  ``cache`` is an optional
+        corecache.CacheView — hits skip lanes, peels are inserted."""
+        qs = QueryState(uts, k, h, prune, stats, cache=cache)
         self.run_pool([qs], stats)
         return qs.decode_results(self.num_vertices)
 

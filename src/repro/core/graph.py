@@ -30,12 +30,18 @@ outgrows its capacity class (capacity-doubling, amortized O(1) recompiles).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional
+import itertools
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 _I32_MIN = np.iinfo(np.int32).min
 _I32_MAX = np.iinfo(np.int32).max
+
+# Monotonic graph identity.  ``id(graph)`` is reused after GC, so caches
+# keyed on it can silently serve closures built for a dead graph; every
+# TemporalGraph instead draws a process-unique uid at construction.
+_GRAPH_UID = itertools.count()
 
 
 class GraphIngestError(ValueError):
@@ -197,6 +203,16 @@ class TemporalGraph:
     num_vertices: int
     unique_ts: np.ndarray    # sorted unique timestamps
     epoch: int = 0           # bumped by every add_edges batch
+    # process-unique identity (never reused, unlike id()); compare=False
+    # keeps two structurally equal graphs equal
+    uid: int = dataclasses.field(
+        default_factory=lambda: next(_GRAPH_UID), compare=False)
+    # lineage of the last append: the uid of the graph this one was grown
+    # from and the [t_min, t_max] span of the appended batch — what lets
+    # the core-result cache invalidate only entries the batch can affect
+    parent_uid: Optional[int] = dataclasses.field(default=None, compare=False)
+    appended_span: Optional[Tuple[int, int]] = dataclasses.field(
+        default=None, compare=False)
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -325,6 +341,8 @@ class TemporalGraph:
             unique_ts=_merge_sorted_unique(
                 self.unique_ts, np.unique(t).astype(np.int32)),
             epoch=self.epoch + 1,
+            parent_uid=self.uid,
+            appended_span=(int(t.min()), int(t.max())),
         )
 
     # ----------------------------------------------------------------- views

@@ -123,11 +123,21 @@ class TCQEngine:
 
     def __init__(self, graph: TemporalGraph, degree_fn=None, *,
                  use_kernel: Optional[bool] = None,
-                 resilience=None):
+                 resilience=None, cache=None):
         from repro.kernels.segdeg.ops import on_tpu
         from repro.core.wave import ResilienceConfig
+        from repro.core.corecache import CoreCache
 
         self._degree_fn = degree_fn
+        # cache=True builds a default TTI-keyed core-result cache
+        # (corecache.CoreCache); an instance is used as-is; None/False
+        # disables result caching (the default for bare engines — the
+        # streaming service enables it for engines it owns).  Cached
+        # results are only sound for the standard distinct-neighbour
+        # degree, so a custom degree_fn forces the cache off.
+        if cache is True:
+            cache = CoreCache()
+        self.core_cache = (cache or None) if degree_fn is None else None
         self._use_kernel = on_tpu() if use_kernel is None else use_kernel
         # resilience=True (or a ResilienceConfig) pins a degradation
         # ladder (Pallas -> XLA -> numpy oracle; demotion on VMEM/compile
@@ -143,6 +153,9 @@ class TCQEngine:
         # (epoch, Ts, Te) -> WindowTEL, LRU
         self._win_cache: "OrderedDict[Tuple[int, int, int], WindowTEL]" = \
             OrderedDict()
+        self._win_hits = 0
+        self._win_misses = 0
+        self._win_evictions = 0
         # epoch -> _EpochAux, LRU (snapshots with queries still in flight)
         self._epoch_aux: "OrderedDict[int, _EpochAux]" = OrderedDict()
         self._install(graph, initial=True)
@@ -198,9 +211,24 @@ class TCQEngine:
         epochs are untouched — their window TELs (and the snapshots they
         were truncated from) stay valid and epoch-keyed.  Host cost is
         O(E) array padding; device programs recompile only when a
-        capacity class grows (amortized O(1) by doubling)."""
+        capacity class grows (amortized O(1) by doubling).
+
+        When the new snapshot is the direct child of the current one
+        (``graph.parent_uid`` matches and the appended batch's time span
+        is known), the core-result cache is *advanced*, not flushed:
+        entries the batch cannot affect are re-keyed to the new epoch,
+        entries it can are invalidated (see CoreCache.advance_epoch).  An
+        unrelated snapshot simply starts the new epoch cold — entries at
+        older epochs stay valid for queries still pinned to them."""
+        old_epoch, old_uid = self.epoch, self.graph.uid
         self.epoch += 1
         self._install(graph, initial=False)
+        if self.core_cache is not None:
+            span = getattr(graph, "appended_span", None)
+            if span is not None and \
+                    getattr(graph, "parent_uid", None) == old_uid:
+                self.core_cache.advance_epoch(old_epoch, self.epoch,
+                                              int(span[0]), int(span[1]))
         return self.epoch
 
     def _remember_aux(self, epoch: int, aux: _EpochAux) -> None:
@@ -255,6 +283,8 @@ class TCQEngine:
         dead_a = [e for e in self._epoch_aux if e not in live]
         for e in dead_a:
             del self._epoch_aux[e]
+        if self.core_cache is not None:
+            self.core_cache.retire_epochs(live)
         return len(dead_w) + len(dead_a)
 
     def rebase_epoch(self, epoch: int) -> None:
@@ -270,6 +300,8 @@ class TCQEngine:
                  if k[0] == self.epoch]
         for k, _ in moved:
             del self._win_cache[k]
+        if self.core_cache is not None:
+            self.core_cache.rebase_epoch(self.epoch, epoch)
         self.epoch = epoch
         self._epoch_aux[epoch] = aux
         for (_, ts, te), v in moved:
@@ -312,8 +344,10 @@ class TCQEngine:
         key = (ep, int(Ts), int(Te))
         hit = self._win_cache.get(key)
         if hit is not None:
+            self._win_hits += 1
             self._win_cache.move_to_end(key)
             return hit
+        self._win_misses += 1
         from repro.core.wave import make_wave_step_fn
 
         aux = self._aux_for(ep, g)
@@ -372,8 +406,37 @@ class TCQEngine:
             out = WindowTEL(tel, seg_pair, aux.seg_vert, aux.v_cap, e, step)
         if len(self._win_cache) >= _WINDOW_CACHE_MAX:
             self._win_cache.popitem(last=False)     # evict least-recent
+            self._win_evictions += 1
         self._win_cache[key] = out
         return out
+
+    # --------------------------------------------------------- observability
+    def stats(self) -> Dict:
+        """Engine-level cache observability: the window-TEL LRU's
+        hit/miss/eviction counters and, when result caching is on, the
+        TTI core cache's counters (see CoreCache.stats)."""
+        out = {
+            "epoch": self.epoch,
+            "window_tel": {
+                "hits": self._win_hits,
+                "misses": self._win_misses,
+                "evictions": self._win_evictions,
+                "size": len(self._win_cache),
+            },
+        }
+        if self.core_cache is not None:
+            out["core_cache"] = self.core_cache.stats()
+        return out
+
+    def _cache_view(self, k: int, h: int, epoch: Optional[int] = None):
+        """CacheView bound to (epoch, k, h), or None when caching is off."""
+        from repro.core.corecache import CacheView
+
+        if self.core_cache is None:
+            return None
+        return CacheView(self.core_cache,
+                         self.epoch if epoch is None else int(epoch),
+                         k, h)
 
     # ------------------------------------------------------------- primitives
     def _tcd(self, alive, ts, te, k, h, wt: Optional[WindowTEL] = None):
@@ -429,7 +492,8 @@ class TCQEngine:
             pipe = WavePipeline(wt.tel, wt.num_vertices,
                                 wt.seg_pair, wt.seg_vert, wave, depth,
                                 step_fn=wt.step_fn)
-            cores = pipe.run(uts, k, h, prune, stats)
+            cores = pipe.run(uts, k, h, prune, stats,
+                             cache=self._cache_view(k, h))
         elif self._degree_fn is not None:
             # custom degree fns are written against the graph's real TEL
             # layout — never hand them the bucket-padded window truncation
@@ -506,9 +570,10 @@ class TCQEngine:
             if n == 0:
                 outs[qi] = TCQResult([], stats)
                 continue
-            states.append((qi, QueryState(uts, int(r["k"]),
-                                          int(r.get("h", 1)), prune,
-                                          stats, qid=qi)))
+            states.append((qi, QueryState(
+                uts, int(r["k"]), int(r.get("h", 1)), prune, stats,
+                qid=qi,
+                cache=self._cache_view(int(r["k"]), int(r.get("h", 1))))))
         if states:
             lo = min(int(s.uts[0]) for _, s in states)
             hi = max(int(s.uts[-1]) for _, s in states)

@@ -50,6 +50,7 @@ class QueryStats:
     cells_total: int = 0          # n*(n+1)/2 schedule cells (unique-ts space)
     cells_evaluated: int = 0      # TCD operations actually executed
     cells_trivial: int = 0        # skipped host-side (provably empty)
+    cells_cached: int = 0         # resolved from the TTI core cache
     duplicates: int = 0           # re-induced cores (0 for serial OTCD)
     por_triggers: int = 0
     pou_triggers: int = 0

@@ -104,13 +104,18 @@ class QueryState:
 
     def __init__(self, uts: np.ndarray, k: int, h: int, prune: bool,
                  stats: QueryStats, qid: int = 0,
-                 deadline: float = float("inf"), priority: int = 0):
+                 deadline: float = float("inf"), priority: int = 0,
+                 cache=None):
         self.qid = qid
         self.uts = np.asarray(uts)
         self.n = int(self.uts.size)
         self.k, self.h = int(k), int(h)
         self.prune = bool(prune)
         self.stats = stats
+        # optional corecache.CacheView bound to this query's (epoch, k, h):
+        # claim() resolves cached cells without spending a lane, retire()
+        # inserts every freshly peeled cell (insert-on-peel)
+        self.cache = cache
         # EDF admission key: the lane pool claims cells from the state
         # with the smallest (deadline, priority) first (scheduler ties
         # fall back to round-robin).  inf deadline = best-effort.
@@ -124,7 +129,10 @@ class QueryState:
         self.empty = EmptyStaircase()
         # (row, col, device [V] row) of the best completed row-initial core
         self.best_init: Optional[Tuple[int, int, object]] = None
-        self.pending = deque(range(self.n))
+        # cursor objects (not bare indices): cache probing can part-consume
+        # a row without claiming a lane, so cursor position must survive
+        # being requeued
+        self.pending = deque(RowCursor(i, self.n) for i in range(self.n))
         self.live_rows = 0          # rows currently holding a lane
         # tti key -> (packed uint32 row, n_edges); decoded in bulk at the end
         self.collected: Dict[Tuple[int, int], Tuple[np.ndarray, int]] = {}
@@ -148,13 +156,49 @@ class QueryState:
         self.pending.clear()
 
     def claim(self) -> Optional[RowCursor]:
-        """Next ready row cursor, or None when nothing is pending."""
+        """Next ready row cursor, or None when nothing is pending.
+
+        With a cache attached, cells that resolve from it are consumed
+        here — fed through the same pruning/dedup feedback as a peeled
+        cell — and only a row whose next cell *misses* ever takes a lane.
+        """
         while self.pending:
-            row = RowCursor(self.pending.popleft(), self.n)
-            if self._advance(row):
+            row = self.pending.popleft()
+            if not self._advance(row):
+                continue
+            if self._drain_cached(row):
                 self.live_rows += 1
                 return row
         return None
+
+    def _drain_cached(self, row: RowCursor) -> bool:
+        """Resolve the row's cells from the cache until a miss (True — the
+        row still needs a lane) or exhaustion (False)."""
+        if self.cache is None:
+            return True
+        while True:
+            hit = self.cache.lookup(*self.window(row))
+            if hit is None:
+                return True
+            self.stats.cells_cached += 1
+            if not self._feedback(row, hit.tti_lo, hit.tti_hi, hit.n_edges,
+                                  hit.packed, None):
+                return False
+
+    def resolve_cached(self) -> int:
+        """Admission-time sweep: resolve every pending row as far as the
+        cache reaches; rows that miss keep their cursor position for the
+        lane pool.  Returns the number of cells resolved (``done`` turns
+        True when the whole query was served from cache)."""
+        resolved0 = self.stats.cells_cached
+        if self.cache is not None and not self.cancelled:
+            keep = deque()
+            while self.pending:
+                row = self.pending.popleft()
+                if self._advance(row) and self._drain_cached(row):
+                    keep.append(row)
+            self.pending = keep
+        return self.stats.cells_cached - resolved0
 
     def _advance(self, row: RowCursor) -> bool:
         """Move the cursor past pruned/empty cells; False once exhausted."""
@@ -188,12 +232,38 @@ class QueryState:
         ``alive_row`` is a thunk producing the lane's device [V] row — it
         is only materialized when the cell becomes the new best warm-start
         row, so retiring never copies lanes it does not need.
+
+        With a cache attached, the peeled cell is inserted before feedback
+        (insert-on-peel), and the row's subsequent cells are drained from
+        the cache so the lane is only kept for a genuine miss.
         """
+        if self.cache is not None:
+            ts, te = self.window(row)
+            if n_edges == 0:
+                self.cache.insert_empty(ts, te)
+            else:
+                self.cache.insert(ts, te, tti_lo, tti_hi, n_edges,
+                                  packed_row)
+        keep = self._feedback(row, tti_lo, tti_hi, n_edges, packed_row,
+                              alive_row)
+        if keep:
+            keep = self._drain_cached(row)
+        if not keep:
+            self.live_rows -= 1
+        return keep
+
+    def _feedback(self, row: RowCursor, tti_lo: int, tti_hi: int,
+                  n_edges: int, packed_row: Optional[np.ndarray],
+                  alive_row: Optional[Callable[[], object]]) -> bool:
+        """Apply one resolved cell (peeled or cache-served) to the query's
+        pruning/dedup/staircase state and advance the cursor; True while
+        the row has cells left.  ``alive_row`` is None for cache hits —
+        there is no device row to promote to a warm start (Theorem 1 makes
+        that a pure perf concession, never a correctness one)."""
         i, j = row.i, row.j
         stats = self.stats
         if n_edges == 0:
             self.empty.add(i, j)        # staircase: row exhausted
-            self.live_rows -= 1
             return False
         a_idx = self.idx_of[tti_lo]
         b_idx = self.idx_of[tti_hi]
@@ -202,7 +272,8 @@ class QueryState:
             stats.duplicates += 1
         else:
             self.collected[key] = (packed_row, n_edges)
-        if row.first and (self.best_init is None or j >= self.best_init[1]):
+        if alive_row is not None and row.first and \
+                (self.best_init is None or j >= self.best_init[1]):
             self.best_init = (i, j, alive_row())
         row.first = False
         if self.prune:
@@ -220,23 +291,29 @@ class QueryState:
             row.j = (b_idx - 1) if b_idx < j else j - 1
         else:
             row.j = j - 1
-        if self._advance(row):
-            return True
-        self.live_rows -= 1
-        return False
+        return self._advance(row)
 
     # -------------------------------------------------------------- results
     def decode_results(self, num_vertices: int
                        ) -> Dict[Tuple[int, int], CoreResult]:
-        """One deferred bulk unpack of every collected packed core row."""
+        """One deferred bulk unpack of every collected packed core row.
+
+        Rows are grouped by packed width before stacking: cache-served
+        rows may predate a capacity growth and carry fewer uint32 words
+        than freshly peeled ones.  Vertex capacities only ever grow and
+        padded vertices are never core members, so a narrower row decodes
+        to the same vertex set.
+        """
         from repro.core.engine import unpack_alive_u32
 
         results: Dict[Tuple[int, int], CoreResult] = {}
-        if self.collected:
-            keys = list(self.collected.keys())
+        by_width: Dict[int, list] = defaultdict(list)
+        for key, (packed_row, _) in self.collected.items():
+            by_width[int(packed_row.size)].append(key)
+        for width, keys in by_width.items():
             bits = unpack_alive_u32(
                 np.stack([self.collected[key][0] for key in keys]),
-                num_vertices)
+                min(int(num_vertices), width * 32))
             for key, row_bits in zip(keys, bits):
                 results[key] = CoreResult(
                     k=self.k, tti=key, vertices=np.flatnonzero(row_bits),

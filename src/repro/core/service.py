@@ -43,7 +43,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from collections import deque
+from collections import Counter, deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -169,6 +169,16 @@ class TCQService:
         Two windows whose gap is <= this many time units still share a
         cluster (0 = pure overlap).  Small positive values trade a
         slightly looser TEL for fewer, fuller pools.
+    cache:
+        TTI-keyed core-result caching (``corecache.CoreCache``) for
+        engines the service builds itself: True (default) builds one,
+        False disables it, an instance is used as-is.  Ignored when an
+        external ``engine=`` is passed — its own ``cache`` setting wins
+        (wrapping a shared engine must not change its semantics).
+        Admission probes the cache before pool formation, so a request
+        whose every cell resolves never joins a pool (and never widens a
+        cluster's union window); peeled cells are inserted as they
+        retire; ingest invalidates incrementally (see ``update_graph``).
 
     Usage::
 
@@ -190,16 +200,21 @@ class TCQService:
                  wave="auto", depth: int = 2, cluster_gap: int = 0,
                  use_kernel: Optional[bool] = None,
                  retain_snapshots: bool = True,
-                 resilience=None):
+                 resilience=None, cache=True):
         if engine is None:
             if graph is None:
                 raise ValueError("need a graph or an engine")
             engine = TCQEngine(graph, use_kernel=use_kernel,
-                               resilience=resilience)
+                               resilience=resilience, cache=cache)
         self.engine = engine
         self.wave = wave
         self.depth = int(depth)
         self.cluster_gap = int(cluster_gap)
+        # arrival-process window histogram: (k, h, ts, te) -> count.
+        # prewarm() peels the hottest uncached windows during idle time so
+        # recurring traffic hits a warm cache.
+        self._hist: Counter = Counter()
+        self._prewarmed = 0
         # False drops each ticket's pinned graph reference once it
         # completes, so a long-running service does not hold one O(E)
         # snapshot per epoch alive through its history (the driver owns
@@ -270,6 +285,7 @@ class TCQService:
             self._retire(tk)
             self._fresh.append(tk)      # handed back by the next pump()
             return tk
+        self._hist[(tk.k, tk.h, tk.ts, tk.te)] += 1
         self._pending.append(tk)
         return tk
 
@@ -322,15 +338,41 @@ class TCQService:
         return hit
 
     # --------------------------------------------------------------- serving
+    def _build_state(self, tk: TCQTicket) -> QueryState:
+        """The ticket's QueryState, created on first need.  An existing
+        state (from an admission-time cache probe) is reused so cells it
+        already resolved are never re-probed or re-peeled."""
+        if tk.state is None:
+            n = int(tk.uts.size)
+            stats = QueryStats(n_timestamps=n,
+                               cells_total=n * (n + 1) // 2)
+            dl = float("inf") if tk.deadline is None else tk.deadline
+            tk.state = QueryState(
+                tk.uts, tk.k, tk.h, True, stats, qid=tk.id,
+                deadline=dl, priority=tk.priority,
+                cache=self.engine._cache_view(tk.k, tk.h, tk.epoch))
+        return tk.state
+
     def _make_state(self, tk: TCQTicket) -> QueryState:
-        n = int(tk.uts.size)
-        stats = QueryStats(n_timestamps=n, cells_total=n * (n + 1) // 2)
-        dl = float("inf") if tk.deadline is None else tk.deadline
-        tk.state = QueryState(tk.uts, tk.k, tk.h, True, stats, qid=tk.id,
-                              deadline=dl, priority=tk.priority)
+        st = self._build_state(tk)
         tk.status = "running"
         tk.admit_s = time.perf_counter()
-        return tk.state
+        return st
+
+    def _try_cache_resolve(self, tk: TCQTicket, now: float) -> bool:
+        """Admission-time cache lookup: resolve the ticket's schedule as
+        far as the TTI cache reaches; True iff it completed entirely from
+        cache (the ticket never joins a pool).  Each ticket is probed
+        once — partial progress is kept on its state, and the lane pool's
+        claim path re-probes naturally as new entries land."""
+        st = self._build_state(tk)
+        st.resolve_cached()
+        if not st.done:
+            return False
+        tk.status = "running"
+        tk.admit_s = now
+        self._finalize(tk, self.engine.num_vertices, time.perf_counter())
+        return True
 
     def _retire(self, tk: TCQTicket) -> None:
         """Bookkeeping for a ticket that just resolved."""
@@ -367,6 +409,15 @@ class TCQService:
         if poll is not None:
             poll(self)
         self.expire()
+        if self.engine.core_cache is not None:
+            # admission-time lookup: tickets served entirely by the TTI
+            # cache resolve here — they never join a pool, never widen a
+            # cluster's union window, and never touch the device
+            now = time.perf_counter()
+            for tk in [t for t in self._pending if t.state is None]:
+                if self._try_cache_resolve(tk, now):
+                    self._pending.remove(tk)
+                    self._fresh.append(tk)
         if not self._pending:
             fresh, self._fresh = self._fresh, []
             return fresh
@@ -421,7 +472,14 @@ class TCQService:
                         and tk.window[1] <= pool_hi):
                     self._pending.remove(tk)
                     members.append(tk)
-                    newly.append(self._make_state(tk))
+                    st = self._make_state(tk)
+                    # a mid-flight arrival fully served by the cache
+                    # resolves on the spot instead of taking lanes
+                    st.resolve_cached()
+                    if st.done:
+                        self._finalize(tk, wt.num_vertices, now)
+                        continue
+                    newly.append(st)
             return newly
 
         pipe.run_pool(states, pool_stats, admit=admit)
@@ -446,6 +504,8 @@ class TCQService:
             "occupancy": pool_stats.occupancy,
             "timeouts": sum(tk.status == "timeout" for tk in members),
             "cancelled": sum(tk.status == "cancelled" for tk in members),
+            "cache_hits": sum(tk.result.stats.cells_cached
+                              for tk in members),
             "backend": getattr(wt.step_fn, "backend", "?"),
             "wall_s": done_s - t0,
         })
@@ -463,6 +523,54 @@ class TCQService:
             served.extend(out)
             if not out and not self._pending:
                 return served
+
+    # ------------------------------------------------------------ prewarming
+    def prewarm(self, max_windows: int = 1) -> int:
+        """Speculatively peel the hottest request windows into the core
+        cache while the service is idle.
+
+        The arrival histogram (every submitted ``(k, h, ts, te)``) ranks
+        windows by observed demand; the hottest whose schedule is not
+        already fully cached at the *current* epoch are peeled through
+        ``engine.query`` (wave mode), which inserts every cell on retire.
+        Drivers call this from their idle branch (``launch.serve``'s
+        open-loop driver does, between arrival gaps) so recurring traffic
+        lands on a warm cache after ingest invalidation.  No-op when
+        caching is off or work is pending (serving always wins the
+        device).  Returns the number of windows peeled.
+        """
+        if self.engine.core_cache is None or self._pending:
+            return 0
+        peeled = 0
+        for (k, h, ts, te), _ in sorted(self._hist.items(),
+                                        key=lambda kv: (-kv[1], kv[0])):
+            if peeled >= int(max_windows):
+                break
+            uts = self.engine.graph.unique_ts
+            uts = uts[(uts >= ts) & (uts <= te)].astype(np.int64)
+            if uts.size == 0:
+                continue
+            probe = QueryState(uts, k, h, True, QueryStats(),
+                               cache=self.engine._cache_view(k, h))
+            probe.resolve_cached()
+            if probe.done:
+                continue                    # already fully cached
+            self.engine.query(k, int(ts), int(te), h=h, mode="wave",
+                              wave=self.wave, depth=self.depth)
+            self._prewarmed += 1
+            peeled += 1
+        return peeled
+
+    @property
+    def stats(self) -> Dict:
+        """Service observability: engine cache counters (window-TEL LRU +
+        TTI core cache, see ``TCQEngine.stats``) plus queue/prewarm
+        gauges."""
+        out = self.engine.stats()
+        out["pending"] = len(self._pending)
+        out["completed"] = len(self.completed)
+        out["prewarmed"] = self._prewarmed
+        return out
 
     # ------------------------------------------------------- crash recovery
     def snapshot(self) -> Dict:
@@ -482,7 +590,7 @@ class TCQService:
         for tk in self._pending:
             if tk.epoch not in graphs:
                 graphs[tk.epoch] = tk.graph.state_dict()
-        return {
+        snap = {
             "version": 1,
             "epoch": int(self.engine.epoch),
             "next_id": int(self._next_id),
@@ -498,6 +606,11 @@ class TCQService:
                                    else tk.deadline - now),
             } for tk in self._pending],
         }
+        if self.engine.core_cache is not None:
+            # additive field (format stays version 1): a restoring service
+            # without a cache simply drops it
+            snap["cache"] = self.engine.core_cache.state_dict()
+        return snap
 
     @classmethod
     def restore(cls, snap: Dict, **kwargs) -> "TCQService":
@@ -533,6 +646,11 @@ class TCQService:
                 priority=int(rec.get("priority", 0)),
                 deadline=None if rem is None else now + float(rem)))
         svc._next_id = int(snap["next_id"])
+        cache_state = snap.get("cache")
+        if cache_state is not None and svc.engine.core_cache is not None:
+            # persisted entries carry the pre-crash epoch numbering, which
+            # the rebase replay above restored — keys line up exactly
+            svc.engine.core_cache.load_state(cache_state)
         return svc
 
     def save_snapshot(self, path_or_file) -> None:
@@ -543,6 +661,8 @@ class TCQService:
         for e, sd in snap.pop("graphs").items():
             for name, arr in sd.items():
                 arrays[f"g{int(e)}__{name}"] = np.asarray(arr)
+        for name, arr in snap.pop("cache", {}).items():
+            arrays[f"cache__{name}"] = np.asarray(arr)
         np.savez(path_or_file, meta=np.frombuffer(
             json.dumps(snap).encode(), dtype=np.uint8), **arrays)
 
@@ -552,10 +672,16 @@ class TCQService:
         with np.load(path_or_file, allow_pickle=False) as z:
             snap = json.loads(bytes(z["meta"]).decode())
             graphs: Dict[int, Dict] = {}
+            cache: Dict[str, np.ndarray] = {}
             for key in z.files:
                 if key == "meta":
                     continue
                 tag, name = key.split("__", 1)
-                graphs.setdefault(int(tag[1:]), {})[name] = z[key]
+                if tag == "cache":
+                    cache[name] = z[key]
+                else:
+                    graphs.setdefault(int(tag[1:]), {})[name] = z[key]
         snap["graphs"] = graphs
+        if cache:
+            snap["cache"] = cache
         return cls.restore(snap, **kwargs)

@@ -59,8 +59,10 @@ class WaveResult(NamedTuple):
 # (id(graph), epoch, use_kernel, interpret) -> (weakref(graph), closures).
 # The band analysis (np.sort over 2P half-pairs + the kernel's k_max pass)
 # used to rerun on every engine/bench construction for the same snapshot;
-# epochs are immutable, so it is cacheable.  The weakref guards against
-# id() reuse after a graph is collected.
+# epochs are immutable, so it is cacheable.  Keyed on the graph's
+# process-unique ``uid`` — unlike ``id()``, never reused after GC, so a
+# fresh graph allocated at a dead graph's address cannot inherit its
+# closures.
 _SEGSUM_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _SEGSUM_CACHE_MAX = 16
 
@@ -79,9 +81,9 @@ def make_segsum_fns(graph: TemporalGraph, *, use_kernel: Optional[bool] = None,
 
     if use_kernel is None:
         use_kernel = on_tpu()
-    key = (id(graph), graph.epoch, bool(use_kernel), interpret)
+    key = (graph.uid, graph.epoch, bool(use_kernel), interpret)
     hit = _SEGSUM_CACHE.get(key)
-    if hit is not None and hit[0]() is graph:
+    if hit is not None:
         _SEGSUM_CACHE.move_to_end(key)
         return hit[1]
     tel_hp_src = np.sort(np.concatenate([graph.pair_u, graph.pair_v]))
@@ -90,6 +92,8 @@ def make_segsum_fns(graph: TemporalGraph, *, use_kernel: Optional[bool] = None,
     seg_vert = make_banded_segsum(tel_hp_src, graph.num_vertices,
                                   use_kernel=use_kernel, interpret=interpret)
     fns = (seg_pair, seg_vert)
+    # identity lives entirely in the uid key; the weakref is kept only so
+    # the entry does not extend the snapshot's lifetime
     _SEGSUM_CACHE[key] = (weakref.ref(graph), fns)
     while len(_SEGSUM_CACHE) > _SEGSUM_CACHE_MAX:
         _SEGSUM_CACHE.popitem(last=False)

@@ -91,10 +91,29 @@ class Backpressure:
         return self.shed / max(1, self.offered)
 
 
+def _cache_report(stats) -> str:
+    """One report line from ``TCQService.stats``: window-TEL LRU counters
+    plus (when result caching is on) TTI core-cache hit rate and size."""
+    wt = stats["window_tel"]
+    line = (f"[serve] window-TEL LRU: {wt['hits']} hits / "
+            f"{wt['misses']} misses / {wt['evictions']} evictions "
+            f"({wt['size']} live)")
+    cc = stats.get("core_cache")
+    if cc is None:
+        return line + " | core cache: off"
+    return line + (f" | core cache: {cc['hits'] + cc['dominance_hits']} "
+                   f"hits ({cc['hit_rate']:.1%}, {cc['dominance_hits']} by "
+                   f"dominance), {cc['invalidated']} invalidated, "
+                   f"{cc['rekeyed']} re-keyed, "
+                   f"{cc['n_cores']} cores / {cc['bytes'] / 1024:.1f} KiB"
+                   + (f", {stats['prewarmed']} prewarmed"
+                      if stats.get("prewarmed") else ""))
+
+
 def serve_closed_loop(graph, requests, *, concurrency: int = 8,
                       queue_cap: int = 16, qps_ceiling: float = 0.0,
                       deadline_s: float = 0.0, wave="auto", depth: int = 2,
-                      cluster_gap: int = 0, resilience=None):
+                      cluster_gap: int = 0, resilience=None, cache=True):
     """Closed-loop driver: keep ``concurrency`` requests outstanding,
     offering the next one the moment a slot frees — the standard way to
     overload a service deterministically (offered load = concurrency /
@@ -109,7 +128,8 @@ def serve_closed_loop(graph, requests, *, concurrency: int = 8,
     from repro.core import TCQService
 
     svc = TCQService(graph, wave=wave, depth=depth, cluster_gap=cluster_gap,
-                     retain_snapshots=False, resilience=resilience)
+                     retain_snapshots=False, resilience=resilience,
+                     cache=cache)
     bp = Backpressure(svc, queue_cap=queue_cap, qps_ceiling=qps_ceiling,
                       deadline_s=deadline_s)
     queue = list(requests)
@@ -152,26 +172,30 @@ def serve_closed_loop(graph, requests, *, concurrency: int = 8,
         "p95_ms": 1e3 * float(np.quantile(lat, .95)),
         "p99_ms": 1e3 * float(np.quantile(lat, .99)),
         "wall_s": wall,
+        "cache": svc.stats,     # window-TEL LRU + TTI core-cache counters
     }
     return svc, tickets, report
 
 
 def serve_stream(graph, requests, *, qps: float, ingest=None,
                  wave="auto", depth: int = 2, cluster_gap: int = 0,
-                 warm: bool = True):
+                 warm: bool = True, cache=True, prewarm: int = 0):
     """Drive a TCQService with an open-loop arrival schedule.
 
     ``requests`` is a list of dicts with an ``arrive_s`` offset
     (``TCQRequestStream.open_loop`` format); ``ingest`` is an optional
     iterator of (u, v, t) arrival batches pushed one per poll interval.
-    Returns (service, served tickets, wall seconds).
+    ``prewarm`` > 0 peels up to that many of the hottest observed windows
+    into the TTI core cache whenever the driver goes idle between
+    arrivals (``TCQService.prewarm``) — idle lanes buy warm hits for the
+    recurring traffic.  Returns (service, served tickets, wall seconds).
     """
     from repro.core import TCQService
 
     # retain_snapshots=False: a long-lived server must not keep one O(E)
     # graph snapshot alive per ingested epoch through its ticket history
     svc = TCQService(graph, wave=wave, depth=depth, cluster_gap=cluster_gap,
-                     retain_snapshots=False)
+                     retain_snapshots=False, cache=cache)
     if warm and requests:
         # warm the compile caches so latency percentiles measure the
         # steady state, not first-shape compilation
@@ -204,7 +228,10 @@ def serve_stream(graph, requests, *, qps: float, ingest=None,
         out = svc.run_until_idle(poll)
         served.extend(out)
         if state["i"] < len(queue):
-            # idle before the next arrival: sleep to its arrival time
+            # idle before the next arrival: spend the gap prewarming the
+            # hottest windows, then sleep to the arrival time
+            if prewarm > 0:
+                svc.prewarm(prewarm)
             nxt = queue[state["i"]]["arrive_s"] - (
                 time.perf_counter() - state["t0"])
             if nxt > 0:
@@ -244,6 +271,13 @@ def main():
                          "alongside latency percentiles")
     ap.add_argument("--concurrency", type=int, default=8,
                     help="outstanding requests in --closed-loop mode")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the TTI-keyed core-result cache "
+                         "(every request recomputes from scratch)")
+    ap.add_argument("--prewarm", type=int, default=0,
+                    help="open-loop mode: peel up to N of the hottest "
+                         "observed windows into the core cache whenever "
+                         "the driver idles between arrivals (0 = off)")
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map engine on the local host mesh")
     ap.add_argument("--combine", default="rs_ag",
@@ -287,13 +321,15 @@ def main():
         svc, tickets, rep = serve_closed_loop(
             g, reqs, concurrency=args.concurrency,
             queue_cap=args.queue_cap, qps_ceiling=args.qps_ceiling,
-            deadline_s=args.deadline_s, wave=wave, depth=args.depth)
+            deadline_s=args.deadline_s, wave=wave, depth=args.depth,
+            cache=not args.no_cache)
         print(f"[serve] closed loop: {rep['offered']} offered, "
               f"{rep['completed']} completed in {rep['wall_s']:.2f}s "
               f"({rep['qps']:.2f} qps), {rep['shed']} shed "
               f"(rate {rep['shed_rate']:.2%}), {rep['timeouts']} timeouts")
         print(f"[serve] latency p50 {rep['p50_ms']:.1f} ms | "
               f"p95 {rep['p95_ms']:.1f} ms | p99 {rep['p99_ms']:.1f} ms")
+        print(_cache_report(rep["cache"]))
         return
 
     reqs = list(TCQRequestStream(lo, hi, k=args.k,
@@ -308,7 +344,9 @@ def main():
                 EdgeStream.replay(future, max(1, args.ingest_batches)))
 
     svc, served, wall = serve_stream(g, reqs, qps=args.qps, ingest=arrivals,
-                                     wave=wave, depth=args.depth)
+                                     wave=wave, depth=args.depth,
+                                     cache=not args.no_cache,
+                                     prewarm=args.prewarm)
     lat = np.array([tk.latency_s for tk in served])
     occ = [p["occupancy"] for p in svc.pool_log if p["device_steps"]]
     mid = sum(p["admitted_midflight"] for p in svc.pool_log)
@@ -326,6 +364,7 @@ def main():
           f"mean occupancy {np.mean(occ) if occ else 0:.1f} cells/step, "
           f"{mid} mid-flight admissions, "
           f"{sum(tk.status == 'timeout' for tk in served)} deadline timeouts")
+    print(_cache_report(svc.stats))
 
 
 if __name__ == "__main__":

@@ -14,3 +14,8 @@ def pytest_configure(config):
         "kernel_gate: interpret-mode fused wave-peel kernel equivalence "
         "gate (CI runs `-m kernel_gate` with REPRO_KERNEL_GATE=1 for the "
         "widened sweep; the tests also run in plain tier-1)")
+    config.addinivalue_line(
+        "markers",
+        "cache_gate: TTI core-cache equivalence gate (CI runs "
+        "`-m cache_gate` with REPRO_CACHE_GATE=1 for the widened fuzz "
+        "seeds; the tests also run in plain tier-1)")

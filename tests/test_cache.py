@@ -1,0 +1,229 @@
+"""TTI core-cache correctness gates.
+
+The cache (``repro.core.corecache``) leans on Property 2 — TTI equality
+is subgraph identity for a fixed (k, h, snapshot) — plus the dominance
+rule (a cell ``(ts, te) -> (lo, hi)`` resolves any queried window
+``(a, b)`` with ``ts <= a <= lo`` and ``hi <= b <= te``).  Everything a
+stale or over-eager cache could corrupt is fuzzed here:
+
+1. **cached == recomputed** — overlapping/repeated windows through a
+   cached engine match a cache-less engine bit-for-bit, and repeats
+   actually hit (the cache is alive, not just harmless);
+2. **ingest invalidation == cold rebuild** — after appends that land
+   inside cached windows, warm results equal a from-scratch engine on
+   the new snapshot (incremental invalidation is exact);
+3. **oracle cross-check** — cached TTIs/cores agree with
+   ``brute_force_query`` on small graphs;
+4. **eviction under pressure** — a byte/cell-starved cache evicts but
+   never serves a wrong (or phantom) core;
+5. **snapshot round-trip** — ``save_snapshot``/``load_snapshot``
+   restores a warm cache (restored repeats hit without peeling), and
+   restoring with ``cache=False`` cleanly drops it.
+
+``REPRO_CACHE_GATE=1`` widens the fuzz seeds (CI's ``cache_gate`` job
+runs ``-m cache_gate``); the same tests run on the narrow seed set in
+plain tier-1.
+"""
+
+import io
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CoreCache, TCQEngine, TCQService, TemporalGraph,
+                        brute_force_query)
+
+CACHE_GATE = os.environ.get("REPRO_CACHE_GATE") == "1"
+SEEDS = list(range(8)) if CACHE_GATE else list(range(3))
+
+
+def random_graph(seed, n_v=20, n_e=140, max_t=16):
+    rng = np.random.default_rng(seed)
+    return TemporalGraph.from_edges(rng.integers(0, n_v, n_e),
+                                    rng.integers(0, n_v, n_e),
+                                    rng.integers(1, max_t + 1, n_e), n_v)
+
+
+def random_windows(rng, uts, n):
+    """Overlapping windows with deliberate repeats and sub-windows."""
+    lo, hi = int(uts[0]), int(uts[-1])
+    wins = []
+    while len(wins) < n:
+        a, b = sorted(rng.integers(lo, hi + 1, size=2).tolist())
+        wins.append((int(a), int(b)))
+        if len(wins) < n and rng.random() < 0.4:
+            wins.append((int(a), int(b)))          # exact repeat
+        if len(wins) < n and b - a > 2 and rng.random() < 0.4:
+            m = int(rng.integers(a, b))            # sub-window (dominance)
+            wins.append((int(m), int(b)))
+    return wins[:n]
+
+
+def assert_same(got, want, ctx=""):
+    assert got.by_tti().keys() == want.by_tti().keys(), ctx
+    for key, cw in want.by_tti().items():
+        cg = got.by_tti()[key]
+        assert np.array_equal(cg.vertices, cw.vertices), (ctx, key)
+        assert cg.n_edges == cw.n_edges, (ctx, key)
+
+
+# ------------------------------------------------ cached == recomputed fuzz
+@pytest.mark.cache_gate
+@pytest.mark.parametrize("seed", SEEDS)
+def test_cached_matches_recomputed(seed):
+    g = random_graph(seed)
+    rng = np.random.default_rng(100 + seed)
+    cached = TCQEngine(g, use_kernel=False, cache=True)
+    plain = TCQEngine(g, use_kernel=False)
+    k = int(rng.integers(2, 4))
+    for a, b in random_windows(rng, g.unique_ts, 14):
+        got = cached.query(k, a, b, mode="wave")
+        want = plain.query(k, a, b, mode="wave")
+        assert_same(got, want, f"seed={seed} k={k} [{a},{b}]")
+    st = cached.core_cache.stats()
+    assert st["hits"] + st["dominance_hits"] > 0   # repeats really hit
+    assert plain.core_cache is None                # bare default stays off
+
+
+# ------------------------------------- ingest invalidation == cold rebuild
+@pytest.mark.cache_gate
+@pytest.mark.parametrize("seed", SEEDS)
+def test_ingest_invalidation_matches_cold_rebuild(seed):
+    g = random_graph(seed, n_e=120)
+    rng = np.random.default_rng(200 + seed)
+    svc = TCQService(g, use_kernel=False, cache=True)
+    uts = g.unique_ts
+    wins = random_windows(rng, uts, 6)
+    k = int(rng.integers(2, 4))
+    for epoch in range(3):
+        tks = [svc.submit({"k": k, "ts": a, "te": b}) for a, b in wins]
+        svc.run_until_idle()
+        cold = TCQEngine(svc.graph, use_kernel=False)
+        for tk, (a, b) in zip(tks, wins):
+            assert_same(tk.result, cold.query(k, a, b, mode="wave"),
+                        f"seed={seed} epoch={epoch} [{a},{b}]")
+        # append *inside* the live span so cached windows must invalidate
+        n = 18
+        svc.push_edges(rng.integers(0, g.num_vertices, n),
+                       rng.integers(0, g.num_vertices, n),
+                       rng.integers(int(uts[0]), int(uts[-1]) + 1, n))
+    cc = svc.stats["core_cache"]
+    assert cc["invalidated"] > 0                   # invalidation fired
+    assert svc.epoch == 3
+
+
+# ------------------------------------------------------- oracle cross-check
+@pytest.mark.cache_gate
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_cached_ttis_match_oracle(seed):
+    g = random_graph(seed, n_v=12, n_e=60, max_t=8)
+    eng = TCQEngine(g, use_kernel=False, cache=True)
+    uts = g.unique_ts
+    a, b = int(uts[0]), int(uts[-1])
+    for _ in range(2):                             # second pass: cache-served
+        got = eng.query(2, a, b, mode="wave")
+        want = brute_force_query(g, 2, a, b)
+        assert got.by_tti().keys() == want.keys()
+        for key, core in got.by_tti().items():
+            assert frozenset(core.vertices.tolist()) == \
+                want[key]["vertices"], key
+            assert core.n_edges == want[key]["n_edges"], key
+    st = eng.core_cache.stats()
+    assert st["hits"] + st["dominance_hits"] > 0
+
+
+# ------------------------------------------------- eviction under pressure
+@pytest.mark.cache_gate
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_eviction_under_pressure_stays_correct(seed):
+    g = random_graph(seed)
+    rng = np.random.default_rng(300 + seed)
+    tiny = CoreCache(max_bytes=256, max_cells=6)
+    cached = TCQEngine(g, use_kernel=False, cache=tiny)
+    plain = TCQEngine(g, use_kernel=False)
+    for a, b in random_windows(rng, g.unique_ts, 16):
+        assert_same(cached.query(2, a, b, mode="wave"),
+                    plain.query(2, a, b, mode="wave"),
+                    f"seed={seed} [{a},{b}]")
+    st = tiny.stats()
+    assert st["evicted_cores"] + st["evicted_cells"] > 0
+    assert st["bytes"] <= 256 and st["n_cells"] <= 6
+
+
+# ------------------------------------------------ snapshot/restore round-trip
+def test_snapshot_restores_warm_cache():
+    g = random_graph(7)
+    rng = np.random.default_rng(7)
+    svc = TCQService(g, use_kernel=False, cache=True)
+    wins = random_windows(rng, g.unique_ts, 6)
+    tks = [svc.submit({"k": 2, "ts": a, "te": b}) for a, b in wins]
+    svc.run_until_idle()
+    n_cores = svc.stats["core_cache"]["n_cores"]
+    assert n_cores > 0
+
+    buf = io.BytesIO()
+    svc.save_snapshot(buf)
+    buf.seek(0)
+    svc2 = TCQService.load_snapshot(buf, use_kernel=False, cache=True)
+    cc2 = svc2.engine.core_cache
+    assert cc2.stats()["n_cores"] == n_cores
+    assert cc2.stats()["n_cells"] == svc.stats["core_cache"]["n_cells"]
+
+    # restored repeats are cache-served (no peeling) and bit-identical
+    tks2 = [svc2.submit({"k": 2, "ts": a, "te": b}) for a, b in wins]
+    svc2.run_until_idle()
+    for tk, tk2 in zip(tks, tks2):
+        assert_same(tk2.result, tk.result, f"[{tk.ts},{tk.te}]")
+        assert tk2.result.stats.cells_cached > 0
+        assert tk2.result.stats.cells_evaluated == 0
+
+
+def test_snapshot_restore_without_cache_drops_cleanly():
+    g = random_graph(9)
+    svc = TCQService(g, use_kernel=False, cache=True)
+    svc.submit({"k": 2, "ts": int(g.unique_ts[0]),
+                "te": int(g.unique_ts[-1])})
+    svc.run_until_idle()
+    buf = io.BytesIO()
+    svc.save_snapshot(buf)
+    buf.seek(0)
+    svc2 = TCQService.load_snapshot(buf, use_kernel=False, cache=False)
+    assert svc2.engine.core_cache is None          # state dropped, no error
+    tk = svc2.submit({"k": 2, "ts": int(g.unique_ts[0]),
+                      "te": int(g.unique_ts[-1])})
+    svc2.run_until_idle()
+    want = TCQEngine(g, use_kernel=False).query(
+        2, int(g.unique_ts[0]), int(g.unique_ts[-1]), mode="wave")
+    assert_same(tk.result, want)
+
+
+# ----------------------------------------------------- CoreCache unit seams
+def test_dominance_and_empty_cells():
+    cc = CoreCache()
+    row = np.asarray([0b101], dtype=np.uint32)
+    cc.insert(0, 2, 1, ts=2, te=12, lo=5, hi=9, n_edges=4, packed=row)
+    # ts <= a <= lo and hi <= b <= te -> dominated, same TTI/core
+    hit = cc.lookup(0, 2, 1, 4, 10)
+    assert hit is not None and (hit.tti_lo, hit.tti_hi) == (5, 9)
+    assert np.array_equal(hit.packed, row)
+    assert cc.lookup(0, 2, 1, 6, 10) is None       # a > lo: not dominated
+    cc.insert_empty(0, 2, 1, 20, 30)
+    empty = cc.lookup(0, 2, 1, 22, 28)             # sub-window of empty
+    assert empty is not None and empty.n_edges == 0 and empty.packed is None
+    assert cc.lookup(0, 3, 1, 4, 10) is None       # other k: separate group
+
+
+def test_advance_epoch_window_vs_tti_invalidation():
+    cc = CoreCache()
+    row = np.asarray([0b11], dtype=np.uint32)
+    cc.insert(0, 2, 1, ts=0, te=10, lo=2, hi=8, n_edges=3, packed=row)
+    cc.insert(0, 2, 1, ts=40, te=50, lo=42, hi=48, n_edges=3, packed=row)
+    inv, rek = cc.advance_epoch(0, 1, batch_lo=5, batch_hi=6)
+    assert inv > 0 and rek > 0
+    assert cc.lookup(1, 2, 1, 0, 10) is None       # window hit batch: gone
+    hit = cc.lookup(1, 2, 1, 40, 50)               # disjoint: re-keyed
+    assert hit is not None and (hit.tti_lo, hit.tti_hi) == (42, 48)
+    # survivors are *moved*, not copied: old-epoch probes now miss
+    # (a safe miss — pinned queries recompute; never a stale serve)
+    assert cc.lookup(0, 2, 1, 40, 50) is None
