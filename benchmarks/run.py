@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 full JSON records under benchmarks/results/.  The wave-engine rows
 (bench_wave + its fused-kernel gate run_kernel + bench_pipeline +
-bench_service + bench_streaming + bench_cache) are additionally folded into the
+bench_service + bench_streaming + bench_cache + bench_distributed) are
+additionally folded into the
 repo-root ``BENCH_wave.json`` so the wave-mode perf trajectory is
 tracked across PRs; bench_wave.run_kernel raises on fused-vs-composite
 bit divergence or a fused-cost regression, and bench_pipeline,
@@ -27,10 +28,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_cache, bench_chaos, bench_distribution,
-                            bench_k, bench_memory, bench_pipeline,
-                            bench_pruning, bench_queries, bench_service,
-                            bench_span, bench_streaming, bench_wave)
+    from benchmarks import (bench_cache, bench_chaos, bench_distributed,
+                            bench_distribution, bench_k, bench_memory,
+                            bench_pipeline, bench_pruning, bench_queries,
+                            bench_service, bench_span, bench_streaming,
+                            bench_wave)
     from benchmarks.common import SMOKE
 
     print("name,us_per_call,derived")
@@ -243,12 +245,34 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
 
+    try:
+        # distributed gate: every mesh shape must stay bit-identical to
+        # the single-device drain, and the best shape must clear the
+        # aggregate-qps floor (the module raises on either violation)
+        drows = bench_distributed.run()
+        trajectory["distributed"] = drows
+        for r in drows:
+            if r["bench"] == "distributed":
+                row(f"distributed/{r['mesh']}", r["t_s"],
+                    f"qps={r['qps']:.2f} speedup={r['speedup']:.2f}x "
+                    f"eff={r['efficiency']:.2f} "
+                    f"combine={r['combine']} "
+                    f"equivalent={r['equivalent']}")
+            else:
+                row("distributed/speedup", 0.0,
+                    f"best={r['best_mesh']} "
+                    f"{r['speedup']:.2f}x floor={r['floor']}x "
+                    f"gate_ok={r['gate_ok']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
     # only a complete trajectory may replace the tracked file — a partial
     # write would clobber the last good cross-PR history (and smoke-sized
     # runs never overwrite the measured numbers)
     if not SMOKE and \
-            {"wave", "kernel", "pipeline", "service",
-             "streaming", "cache", "chaos"} <= trajectory.keys():
+            {"wave", "kernel", "pipeline", "service", "streaming",
+             "cache", "chaos", "distributed"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

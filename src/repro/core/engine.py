@@ -104,14 +104,22 @@ class _Slot:
     or None when free; ``dirty`` marks lanes holding a stale (dead) mask.
     """
 
-    __slots__ = ("buf", "lanes", "dirty", "inflight")
+    __slots__ = ("buf", "lanes", "dirty", "inflight",
+                 "_params_np", "_params_dev")
 
-    def __init__(self, wave: int, num_vertices: int):
-        self.buf = jnp.zeros((wave, num_vertices), dtype=bool)
+    def __init__(self, wave: int, num_vertices: int, buf=None):
+        # callers may hand in a pre-placed buffer (the sharded pipeline
+        # allocates its slabs with an explicit mesh sharding)
+        self.buf = (jnp.zeros((wave, num_vertices), dtype=bool)
+                    if buf is None else buf)
         self.lanes: List[Optional[Tuple[QueryState, RowCursor]]] = \
             [None] * wave
         self.dirty: set = set()
         self.inflight: Optional[StepResult] = None
+        # committed (ts, te, k, h) cache for sharded pipelines: the host
+        # vectors + their device placements from the last dispatch
+        self._params_np = None
+        self._params_dev = None
 
 
 class WavePipeline:
@@ -141,6 +149,46 @@ class WavePipeline:
                                         seg_pair=seg_pair, seg_vert=seg_vert,
                                         donate=True)
         self._step = step_fn
+
+    # ------------------------------------------------- subclass seams
+    # The sharded pipeline (core/distributed.py) overrides these four
+    # hooks to place slot buffers on a mesh, batch lane refills into two
+    # device calls, and account per-shard occupancy + collective bytes.
+    # The base implementations reproduce the historical single-device
+    # behavior exactly (same jitted calls in the same order).
+    def _new_slot(self) -> "_Slot":
+        return _Slot(self.wave, self.num_vertices)
+
+    def _refill_lanes(self, buf, sets, fills):
+        """Apply lane refills to ``buf``: ``sets`` is [(lane, device
+        row)] warm starts, ``fills`` is [(lane, bool)] constant masks.
+        Lanes are disjoint across the two lists, so application order
+        between them is irrelevant."""
+        for li, value in fills:
+            buf = _fill_lane(buf, li, value)
+        for li, row in sets:
+            buf = _set_lane(buf, li, row)
+        return buf
+
+    def _record_occupied(self, occupied: List[int]) -> None:
+        pass
+
+    def _warm_row(self, res: StepResult, packed: np.ndarray, li: int):
+        """Thunk producing lane ``li``'s [V] alive row for warm-start
+        reuse (only materialized when the cell becomes the row's best
+        warm start).  Sharded pipelines override this: slicing a
+        mesh-sharded buffer is an eager cross-device gather, so they
+        unpack the already-fetched host bitmask instead."""
+        return lambda: res.alive[li]
+
+    def _commit_params(self, slot: "_Slot", params):
+        """Place the per-lane (ts, te, k, h) host vectors for the step.
+        Sharded pipelines override this to commit to the lane axis once
+        per refill instead of once per step."""
+        return tuple(jnp.asarray(p) for p in params)
+
+    def _finish_pool(self, pool_stats: QueryStats) -> None:
+        pass
 
     def run(self, uts: np.ndarray, k: int, h: int, prune: bool,
             stats: QueryStats, cache=None
@@ -194,14 +242,14 @@ class WavePipeline:
                     claimable.append(s)
                     pool_stats.admissions += 1
 
-        def _edf_key(s: QueryState) -> Tuple[float, int]:
-            return (s.deadline, s.priority)
-
         def claim() -> Optional[Tuple[QueryState, RowCursor]]:
             while claimable:
-                best = min(_edf_key(s) for s in claimable)
-                while _edf_key(claimable[0]) != best:
-                    claimable.rotate(-1)    # EDF: walk to an urgent state
+                bi, best = 0, claimable[0]._edf
+                for i, s2 in enumerate(claimable):
+                    k2 = s2._edf
+                    if k2 < best:
+                        bi, best = i, k2
+                claimable.rotate(-bi)       # EDF: walk to an urgent state
                 s = claimable[0]
                 if s.cancelled:
                     claimable.popleft()
@@ -229,6 +277,8 @@ class WavePipeline:
             """Claim ready cells into free lanes and refill their masks."""
             refill()
             release_cancelled(slot)
+            sets: List[Tuple[int, jnp.ndarray]] = []
+            fills: List[Tuple[int, bool]] = []
             for li in range(W):
                 if slot.lanes[li] is not None:
                     continue
@@ -239,16 +289,18 @@ class WavePipeline:
                 slot.lanes[li] = (s, row)
                 warm = s.warm_start(row)
                 if warm is not None:
-                    slot.buf = _set_lane(slot.buf, li, warm)
+                    sets.append((li, warm))
                 else:
-                    slot.buf = _fill_lane(slot.buf, li, True)
+                    fills.append((li, True))
                 slot.dirty.discard(li)
                 pool_stats.lane_refills += 1
             # lanes that died and were not re-claimed: zero once so the
             # shared fixpoint loop never spends iterations peeling them
             for li in sorted(slot.dirty):
-                slot.buf = _fill_lane(slot.buf, li, False)
+                fills.append((li, False))
             slot.dirty.clear()
+            if sets or fills:
+                slot.buf = self._refill_lanes(slot.buf, sets, fills)
 
         def dispatch(slot: _Slot) -> None:
             occupied = [li for li in range(W)
@@ -256,22 +308,27 @@ class WavePipeline:
             if not occupied:
                 slot.inflight = None
                 return
-            ts_arr = np.zeros(W, np.int32)
-            te_arr = np.full(W, -1, np.int32)   # empty window for padding
-            k_arr = np.ones(W, np.int32)
-            h_arr = np.ones(W, np.int32)
+            # stage per-lane params in python lists: element stores into
+            # numpy arrays cost ~100ns each and this runs per step
+            ts_l, te_l = [0] * W, [-1] * W      # empty window for padding
+            k_l, h_l = [1] * W, [1] * W
             for li in occupied:
                 s, row = slot.lanes[li]
-                ts_arr[li], te_arr[li] = s.window(row)
-                k_arr[li], h_arr[li] = s.k, s.h
+                ts_l[li], te_l[li] = s.window(row)
+                k_l[li], h_l[li] = s.k, s.h
                 s.stats.cells_evaluated += 1
+            ts_arr = np.array(ts_l, np.int32)
+            te_arr = np.array(te_l, np.int32)
+            k_arr = np.array(k_l, np.int32)
+            h_arr = np.array(h_l, np.int32)
             slot.inflight = self._step(
-                slot.buf, jnp.asarray(ts_arr), jnp.asarray(te_arr),
-                jnp.asarray(k_arr), jnp.asarray(h_arr))
+                slot.buf, *self._commit_params(
+                    slot, (ts_arr, te_arr, k_arr, h_arr)))
             slot.buf = slot.inflight.alive   # donated through; new handle
             pool_stats.device_steps += 1
             nonlocal occupied_total
             occupied_total += len(occupied)
+            self._record_occupied(occupied)
 
         def retire(slot: _Slot) -> None:
             res = slot.inflight
@@ -282,6 +339,9 @@ class WavePipeline:
             pool_stats.bytes_synced += (packed.nbytes + lo.nbytes + hi.nbytes
                                         + ne.nbytes + it.nbytes)
             pool_stats.peel_iters += int(it)
+            # python scalars up front: numpy scalar indexing costs ~100ns
+            # per element and this loop touches four per occupied lane
+            lo_l, hi_l, ne_l = lo.tolist(), hi.tolist(), ne.tolist()
             for li in range(W):
                 lane = slot.lanes[li]
                 if lane is None:
@@ -295,9 +355,9 @@ class WavePipeline:
                     slot.lanes[li] = None
                     slot.dirty.add(li)
                     continue
-                keep = s.retire(row, int(lo[li]), int(hi[li]), int(ne[li]),
-                                packed[li].copy(),
-                                lambda li=li: res.alive[li])
+                keep = s.retire(row, lo_l[li], hi_l[li], ne_l[li],
+                                packed[li],
+                                self._warm_row(res, packed, li))
                 if not keep:
                     slot.lanes[li] = None
                     slot.dirty.add(li)
@@ -309,7 +369,7 @@ class WavePipeline:
         # Idle slots reassemble too (a live queue may have admitted new
         # queries since their last dispatch), and the ring only stops
         # once nothing is in flight and the final admit poll is empty.
-        slots = [_Slot(W, self.num_vertices) for _ in range(self.depth)]
+        slots = [self._new_slot() for _ in range(self.depth)]
         for slot in slots:
             assemble(slot)
             dispatch(slot)
@@ -328,3 +388,4 @@ class WavePipeline:
 
         if pool_stats.device_steps:
             pool_stats.occupancy = occupied_total / pool_stats.device_steps
+        self._finish_pool(pool_stats)

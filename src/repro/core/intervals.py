@@ -32,22 +32,32 @@ class IntervalSet:
         (exact per-rule pruning accounting, paper Table 4)."""
         if lo > hi:
             return 0
-        new = (hi - lo + 1) - self.total_covered(lo, hi)
-        if new == 0 and self.covers(lo) and self.covers(hi):
-            return 0
-        i = bisect.bisect_left(self._los, lo)
-        # merge with neighbours
-        start = i
-        if start > 0 and self._ivs[start - 1][1] >= lo - 1:
+        ivs = self._ivs
+        los = self._los
+        # merge with neighbours; count already-covered integers in the
+        # same bounded sweep (intervals are disjoint with gaps >= 2, so a
+        # fully covered [lo, hi] lies inside one existing interval)
+        start = bisect.bisect_left(los, lo)
+        if start > 0 and ivs[start - 1][1] >= lo - 1:
             start -= 1
         end = start
         a, b = lo, hi
-        while end < len(self._ivs) and self._ivs[end][0] <= hi + 1:
-            a = min(a, self._ivs[end][0])
-            b = max(b, self._ivs[end][1])
+        covered = 0
+        while end < len(ivs) and ivs[end][0] <= hi + 1:
+            ia, ib = ivs[end]
+            a2, b2 = max(ia, lo), min(ib, hi)
+            if a2 <= b2:
+                covered += b2 - a2 + 1
+            if ia < a:
+                a = ia
+            if ib > b:
+                b = ib
             end += 1
-        self._ivs[start:end] = [(a, b)]
-        self._los = [x for x, _ in self._ivs]
+        new = (hi - lo + 1) - covered
+        if new == 0:
+            return 0
+        ivs[start:end] = [(a, b)]
+        los[start:end] = [a]
         return new
 
     def covers(self, x: int) -> bool:
@@ -66,11 +76,16 @@ class IntervalSet:
 
     def total_covered(self, lo: int, hi: int) -> int:
         """Number of covered integers within [lo, hi]."""
+        if lo > hi:
+            return 0
+        i = bisect.bisect_left(self._los, lo)
+        if i > 0 and self._ivs[i - 1][1] >= lo:
+            i -= 1
         n = 0
-        for a, b in self._ivs:
-            a2, b2 = max(a, lo), min(b, hi)
-            if a2 <= b2:
-                n += b2 - a2 + 1
+        while i < len(self._ivs) and self._ivs[i][0] <= hi:
+            a, b = self._ivs[i]
+            n += min(b, hi) - max(a, lo) + 1
+            i += 1
         return n
 
     def __repr__(self) -> str:

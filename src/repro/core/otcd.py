@@ -55,6 +55,7 @@ import time
 from collections import OrderedDict, defaultdict
 from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -123,12 +124,33 @@ class TCQEngine:
 
     def __init__(self, graph: TemporalGraph, degree_fn=None, *,
                  use_kernel: Optional[bool] = None,
-                 resilience=None, cache=None):
+                 resilience=None, cache=None,
+                 mesh=None, combine: str = "auto"):
         from repro.kernels.segdeg.ops import on_tpu
         from repro.core.wave import ResilienceConfig
         from repro.core.corecache import CoreCache
 
         self._degree_fn = degree_fn
+        # mesh=(jax Mesh) shards the wave path: edges over the mesh's
+        # "model" axis, query lanes over pod x data (core/distributed.py).
+        # The serial path, the TCD primitives and every cache stay
+        # single-device — the mesh only changes who executes the peel.
+        # combine: "psum" | "rs_ag" | "auto" (pick from V and lane count,
+        # scheduler.choose_combine) — the degree-combine collective.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.core.distributed import mesh_shard_counts
+
+            self._lane_shards, self._model_shards = mesh_shard_counts(mesh)
+            self._dist = {"pool_runs": 0, "device_steps": 0,
+                          "collective_bytes": 0}
+        else:
+            self._lane_shards = self._model_shards = 1
+            self._dist = None
+        self._combine_req = combine
+        self._combine = None
+        self._shard_plan = None
+        self._plan_arrays = None
         # cache=True builds a default TTI-keyed core-result cache
         # (corecache.CoreCache); an instance is used as-is; None/False
         # disables result caching (the default for bare engines — the
@@ -185,6 +207,16 @@ class TCQEngine:
                 self._pair_cap = pow2_capacity(graph.num_pairs)
             if grew_verts:
                 self._v_cap = pow2_capacity(graph.num_vertices)
+        if self.mesh is not None:
+            # one vertex width everywhere: the sharded step needs V to be
+            # a multiple of 8*model_shards (byte-aligned alive slices per
+            # shard), and the single-device TEL must agree — its hp_src
+            # sentinel is v_cap, which must sit at the shared width's
+            # dropped segment, not inside a wider sharded degree slice
+            from repro.core.distributed import ShardPlan
+
+            self._v_cap = ShardPlan._round_vertices(self._v_cap,
+                                                    self._model_shards)
         self.graph = graph
         arrs = graph.tel_arrays(edge_capacity=self._edge_cap,
                                 pair_capacity=self._pair_cap,
@@ -204,6 +236,63 @@ class TCQEngine:
                         self.tel.hp_pair, self._seg_pair, self._seg_vert,
                         self._pair_cap, self._v_cap)
         self._remember_aux(self.epoch, aux)
+        if self.mesh is not None:
+            self._install_shards(graph, initial)
+
+    def _install_shards(self, graph: TemporalGraph, initial: bool) -> None:
+        """Build or in-place refresh the frozen-ownership shard plan and
+        re-place the full-graph edge shards on the mesh.  In the
+        streaming steady state (no capacity growth) ``refresh`` keeps
+        every buffer shape, so the compiled sharded step — keyed on
+        (mesh, v_cap, p_cap, combine) plus the edge-cap bucket — carries
+        across epochs with zero recompiles."""
+        from repro.core.distributed import ShardPlan, wave_shardings
+        from repro.core.scheduler import choose_combine
+
+        if initial or self._shard_plan is None:
+            self._shard_plan = ShardPlan.build(graph, self._model_shards,
+                                               vertex_capacity=self._v_cap)
+        else:
+            self._shard_plan.refresh(graph, vertex_capacity=self._v_cap)
+        plan = self._shard_plan
+        assert plan.num_vertices == self._v_cap
+        sh = wave_shardings(self.mesh, plan.num_vertices, plan.num_shards)
+        self._edges_sharding = sh["edges"]
+        self._plan_arrays = tuple(
+            jax.device_put(a, sh["edges"])
+            for a in (plan.src, plan.dst, plan.t, plan.pair_local,
+                      plan.hp_src, plan.hp_pair))
+        if self._combine_req == "auto":
+            # nominal wave of 32 lanes: the choice only flips on V, and
+            # pinning it here keeps one compiled program per capacity
+            # class instead of one per autotuned W
+            self._combine = choose_combine(self._v_cap, 32,
+                                           self._model_shards)
+        else:
+            self._combine = self._combine_req
+
+    def _sharded_step(self, arrays, tel, Ts: int, Te: int, *, full: bool):
+        """The sharded device step (or ladder) for one window entry.
+        ``arrays`` are the mesh-placed edge shards, ``tel`` the matching
+        single-device window TEL (serial mode, the ladder's oracle rung,
+        and the kernel-within-shard build all read it)."""
+        from repro.core.distributed import (ShardedDegradationLadder,
+                                            make_sharded_kernel_step,
+                                            make_sharded_step_fn)
+
+        plan = self._shard_plan
+        if self._resilience is not None:
+            return ShardedDegradationLadder(
+                self.mesh, arrays, tel, self._v_cap, p_cap=plan.p_cap,
+                combine=self._combine, use_kernel=self._use_kernel,
+                config=self._resilience)
+        if self._use_kernel and self._model_shards == 1:
+            step = make_sharded_kernel_step(self.mesh, tel, self._v_cap)
+            if step is not None:
+                return step
+        return make_sharded_step_fn(
+            self.mesh, arrays, num_vertices=self._v_cap, p_cap=plan.p_cap,
+            combine=self._combine, donate=True)
 
     def update_graph(self, graph: TemporalGraph) -> int:
         """Install a new graph snapshot (streaming append) under a fresh
@@ -355,12 +444,16 @@ class TCQEngine:
         e = int(idx.size)
         donate = self._resilience is None
         if ep == self.epoch and e >= g.num_edges:
-            step = make_wave_step_fn(self.tel, self._v_cap,
-                                     seg_pair=self._seg_pair,
-                                     seg_vert=self._seg_vert,
-                                     use_kernel=self._use_kernel,
-                                     donate=donate,
-                                     resilience=self._resilience)
+            if self.mesh is not None:
+                step = self._sharded_step(self._plan_arrays, self.tel,
+                                          Ts, Te, full=True)
+            else:
+                step = make_wave_step_fn(self.tel, self._v_cap,
+                                         seg_pair=self._seg_pair,
+                                         seg_vert=self._seg_vert,
+                                         use_kernel=self._use_kernel,
+                                         donate=donate,
+                                         resilience=self._resilience)
             out = WindowTEL(self.tel, self._seg_pair, self._seg_vert,
                             self._v_cap, e, step)
         else:
@@ -398,17 +491,65 @@ class TCQEngine:
             # fused kernel's host-side band tables follow this truncation's
             # segment ids, so they are built once per (epoch, Ts, Te) and
             # shared by every pipeline that peels this window
-            step = make_wave_step_fn(tel, aux.v_cap, seg_pair=seg_pair,
-                                     seg_vert=aux.seg_vert,
-                                     use_kernel=self._use_kernel,
-                                     donate=donate,
-                                     resilience=self._resilience)
+            if self.mesh is not None:
+                plan = self._shard_plan
+                sharr = plan.window_arrays(g, int(Ts), int(Te))
+                hp = plan.hp_arrays(g)
+                arrays = tuple(jax.device_put(a, self._edges_sharding)
+                               for a in sharr + hp)
+                step = self._sharded_step(arrays, tel, Ts, Te, full=False)
+            else:
+                step = make_wave_step_fn(tel, aux.v_cap, seg_pair=seg_pair,
+                                         seg_vert=aux.seg_vert,
+                                         use_kernel=self._use_kernel,
+                                         donate=donate,
+                                         resilience=self._resilience)
             out = WindowTEL(tel, seg_pair, aux.seg_vert, aux.v_cap, e, step)
         if len(self._win_cache) >= _WINDOW_CACHE_MAX:
             self._win_cache.popitem(last=False)     # evict least-recent
             self._win_evictions += 1
         self._win_cache[key] = out
         return out
+
+    # ------------------------------------------------------------ pool seam
+    def make_pool(self, lo: int, hi: int, *,
+                  graph: Optional[TemporalGraph] = None,
+                  epoch: Optional[int] = None, num_queries: int = 1,
+                  wave: Union[int, str] = "auto", depth: int = 2):
+        """Window TEL + lane pipeline for one pool run — the single seam
+        ``query``/``query_batch``/``TCQService.pump`` build pools
+        through, so the mesh routing decision lives in one place.
+
+        Returns ``(pipe, wt, wave)``: on a plain engine a
+        :class:`~repro.core.engine.WavePipeline` over the window's
+        single-device step; on a mesh engine a
+        :class:`~repro.core.distributed.ShardedWavePipeline` over the
+        shard_map step, with W autotuned (or rounded up) to a multiple
+        of the lane-axis size.
+        """
+        wt = self._window_tel(int(lo), int(hi), graph=graph, epoch=epoch)
+        if self.mesh is None:
+            if wave == "auto":
+                wave = autotune_wave(wt.num_vertices, wt.window_edges,
+                                     num_queries=num_queries, depth=depth)
+            pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
+                                wt.seg_vert, wave, depth,
+                                step_fn=wt.step_fn)
+            return pipe, wt, wave
+        from repro.core.distributed import ShardedWavePipeline
+
+        L = self._lane_shards
+        if wave == "auto":
+            wave = autotune_wave(wt.num_vertices, wt.window_edges,
+                                 num_queries=num_queries, depth=depth,
+                                 lane_shards=L)
+        else:
+            wave = -(-int(wave) // L) * L   # even lane split per shard
+        pipe = ShardedWavePipeline(wt.step_fn, mesh=self.mesh,
+                                   num_vertices=wt.num_vertices,
+                                   wave=wave, depth=depth,
+                                   dist_counters=self._dist)
+        return pipe, wt, wave
 
     # --------------------------------------------------------- observability
     def stats(self) -> Dict:
@@ -426,6 +567,16 @@ class TCQEngine:
         }
         if self.core_cache is not None:
             out["core_cache"] = self.core_cache.stats()
+        if self.mesh is not None:
+            out["distributed"] = {
+                "mesh": dict(zip(self.mesh.axis_names,
+                                 self.mesh.devices.shape)),
+                "devices": int(self.mesh.devices.size),
+                "lane_shards": self._lane_shards,
+                "model_shards": self._model_shards,
+                "combine": self._combine,
+                **self._dist,
+            }
         return out
 
     def _cache_view(self, k: int, h: int, epoch: Optional[int] = None):
@@ -484,14 +635,9 @@ class TCQEngine:
             # silently ignoring the override
             mode = "serial"
         if mode == "wave":
-            wt = self._window_tel(int(uts[0]), int(uts[-1]))
+            pipe, wt, wave = self.make_pool(int(uts[0]), int(uts[-1]),
+                                            wave=wave, depth=depth)
             stats.window_edges = wt.window_edges
-            if wave == "auto":
-                wave = autotune_wave(wt.num_vertices, wt.window_edges,
-                                     depth=depth)
-            pipe = WavePipeline(wt.tel, wt.num_vertices,
-                                wt.seg_pair, wt.seg_vert, wave, depth,
-                                step_fn=wt.step_fn)
             cores = pipe.run(uts, k, h, prune, stats,
                              cache=self._cache_view(k, h))
         elif self._degree_fn is not None:
@@ -577,14 +723,10 @@ class TCQEngine:
         if states:
             lo = min(int(s.uts[0]) for _, s in states)
             hi = max(int(s.uts[-1]) for _, s in states)
-            wt = self._window_tel(lo, hi)
-            if wave == "auto":
-                wave = autotune_wave(wt.num_vertices, wt.window_edges,
-                                     num_queries=len(states), depth=depth)
+            pipe, wt, wave = self.make_pool(lo, hi,
+                                            num_queries=len(states),
+                                            wave=wave, depth=depth)
             pool_stats = QueryStats()
-            pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
-                                wt.seg_vert, wave, depth,
-                                step_fn=wt.step_fn)
             pipe.run_pool([s for _, s in states], pool_stats)
             for qi, s in states:
                 st = s.stats

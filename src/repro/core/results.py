@@ -69,6 +69,8 @@ class QueryStats:
     occupancy: float = 0.0        # mean occupied lanes per device step (wave)
     batch_size: int = 0           # queries sharing the pipeline (query_batch)
     wall_time_s: float = 0.0
+    collective_bytes: int = 0     # degree-combine wire bytes (sharded pools)
+    shard_occupancy: Optional[List[float]] = None  # per-lane-shard occupancy
 
     def absorb_pool(self, pool_stats: "QueryStats", *, window_edges: int,
                     batch_size: int) -> None:
@@ -84,6 +86,8 @@ class QueryStats:
         self.lane_refills = pool_stats.lane_refills
         self.admissions = pool_stats.admissions
         self.occupancy = pool_stats.occupancy
+        self.collective_bytes = pool_stats.collective_bytes
+        self.shard_occupancy = pool_stats.shard_occupancy
 
     @property
     def pruned_total(self) -> int:

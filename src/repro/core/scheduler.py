@@ -121,6 +121,9 @@ class QueryState:
         # fall back to round-robin).  inf deadline = best-effort.
         self.deadline = float(deadline)
         self.priority = int(priority)
+        # memoized (deadline, priority): both are fixed at admission, and
+        # the pool's EDF claim loop reads the key O(states) per claim
+        self._edf = (self.deadline, self.priority)
         # set by cancel(): the pool reclaims this query's lanes at the
         # next assemble/retire instead of peeling them further
         self.cancelled = False
@@ -314,9 +317,15 @@ class QueryState:
             bits = unpack_alive_u32(
                 np.stack([self.collected[key][0] for key in keys]),
                 min(int(num_vertices), width * 32))
-            for key, row_bits in zip(keys, bits):
+            # one nonzero over the stacked group, split at row boundaries
+            # (vs a flatnonzero per core: this loop is the hot tail of
+            # every query's finalize)
+            rows_idx, cols = np.nonzero(bits)
+            verts = np.split(cols, np.searchsorted(
+                rows_idx, np.arange(1, len(keys))))
+            for key, v in zip(keys, verts):
                 results[key] = CoreResult(
-                    k=self.k, tti=key, vertices=np.flatnonzero(row_bits),
+                    k=self.k, tti=key, vertices=v,
                     n_edges=self.collected[key][1])
         return results
 
@@ -328,7 +337,8 @@ _W_MIN, _W_MAX = 4, 64
 
 
 def autotune_wave(num_vertices: int, window_edges: int,
-                  num_queries: int = 1, depth: int = 2) -> int:
+                  num_queries: int = 1, depth: int = 2,
+                  lane_shards: int = 1) -> int:
     """Pick the lane count W for a (batch of) wave queries.
 
     One fixpoint iteration touches O(W * (E_w + V)) active elements (edge
@@ -345,9 +355,42 @@ def autotune_wave(num_vertices: int, window_edges: int,
     also scales with how many queries the pool serves.  Result is a power
     of two in [4, 64] so lane-buffer shapes (and compiled programs) are
     reused.
+
+    On a mesh, ``lane_shards`` is the lane-axis size (pod x data): the
+    supply/budget math is *per shard* (each shard holds W/L lanes of
+    live state and the edge shards are narrower by the model factor,
+    which ``window_edges`` callers already account for by passing the
+    union-window edge count — conservative), the per-query demand is
+    divided across shards, and the result is scaled back to a global W
+    that is a multiple of L so the [W, V] buffer splits evenly over the
+    lane axis.  ``lane_shards=1`` reproduces the single-device choice
+    exactly.
     """
     per_lane = max(1, int(num_vertices) + int(window_edges))
     supply = max(1, (2 * _LANE_ELEM_BUDGET) // (per_lane * max(1, int(depth))))
-    demand = _LANES_PER_QUERY * max(1, int(num_queries))
+    shards = max(1, int(lane_shards))
+    demand = -(-(_LANES_PER_QUERY * max(1, int(num_queries))) // shards)
     w = max(_W_MIN, min(_W_MAX, supply, demand))
-    return 1 << (w.bit_length() - 1)            # round down to a power of two
+    w = 1 << (w.bit_length() - 1)               # round down to a power of two
+    return w * shards
+
+
+# Dense psum payloads up to this many elements (V * W f32 degrees) are
+# cheaper than the extra all-gather latency of rs_ag on small problems;
+# beyond it the ~7x wire saving of reduce-scatter + 1-byte alive gather
+# wins.  See combine_bytes_per_lane_iter in core/distributed.py for the
+# analytic model that stats() reports alongside the choice.
+_COMBINE_DENSE_MAX = 1 << 16
+
+
+def choose_combine(num_vertices: int, wave: int, model_shards: int) -> str:
+    """Auto-select the sharded degree-combine collective: dense all-reduce
+    ("psum") for small V*W payloads, reduce-scatter + alive all-gather
+    ("rs_ag") once the dense payload outgrows ``_COMBINE_DENSE_MAX``.
+    Single-model-shard meshes have no combine; "psum" (a no-op) keeps the
+    compiled program collective-free."""
+    if model_shards <= 1:
+        return "psum"
+    if int(num_vertices) * max(1, int(wave)) <= _COMBINE_DENSE_MAX:
+        return "psum"
+    return "rs_ag"

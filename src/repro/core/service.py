@@ -51,8 +51,7 @@ import numpy as np
 from repro.core.graph import TemporalGraph
 from repro.core.otcd import TCQEngine
 from repro.core.results import QueryStats, TCQResult
-from repro.core.scheduler import QueryState, autotune_wave
-from repro.core.engine import WavePipeline
+from repro.core.scheduler import QueryState
 
 
 # ---------------------------------------------------------------- clustering
@@ -200,12 +199,14 @@ class TCQService:
                  wave="auto", depth: int = 2, cluster_gap: int = 0,
                  use_kernel: Optional[bool] = None,
                  retain_snapshots: bool = True,
-                 resilience=None, cache=True):
+                 resilience=None, cache=True,
+                 mesh=None, combine: str = "auto"):
         if engine is None:
             if graph is None:
                 raise ValueError("need a graph or an engine")
             engine = TCQEngine(graph, use_kernel=use_kernel,
-                               resilience=resilience, cache=cache)
+                               resilience=resilience, cache=cache,
+                               mesh=mesh, combine=combine)
         self.engine = engine
         self.wave = wave
         self.depth = int(depth)
@@ -437,15 +438,9 @@ class TCQService:
             self._pending.remove(tk)
         pool_lo = min(tk.window[0] for tk in members)
         pool_hi = max(tk.window[1] for tk in members)
-        wt = self.engine._window_tel(pool_lo, pool_hi,
-                                     graph=head.graph, epoch=epoch)
-        wave = self.wave
-        if wave == "auto":
-            wave = autotune_wave(wt.num_vertices, wt.window_edges,
-                                 num_queries=len(members), depth=self.depth)
-        pipe = WavePipeline(wt.tel, wt.num_vertices, wt.seg_pair,
-                            wt.seg_vert, wave, self.depth,
-                            step_fn=wt.step_fn)
+        pipe, wt, wave = self.engine.make_pool(
+            pool_lo, pool_hi, graph=head.graph, epoch=epoch,
+            num_queries=len(members), wave=self.wave, depth=self.depth)
         states = [self._make_state(tk) for tk in members]
         pool_stats = QueryStats()
         t0 = time.perf_counter()
@@ -509,6 +504,11 @@ class TCQService:
             "backend": getattr(wt.step_fn, "backend", "?"),
             "wall_s": done_s - t0,
         })
+        if pool_stats.shard_occupancy is not None:
+            self.pool_log[-1]["shard_occupancy"] = \
+                pool_stats.shard_occupancy
+            self.pool_log[-1]["collective_bytes"] = \
+                pool_stats.collective_bytes
         return members + fresh
 
     def run_until_idle(self, poll: Optional[Callable] = None

@@ -21,7 +21,19 @@ occupancy, and the epoch count ingested while serving.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --fake-devices must take effect before jax picks its host backend, so
+# scan argv at import time (argparse runs far too late: any repro import
+# below main() may initialize jax).
+if "--fake-devices" in sys.argv:
+    _n = int(sys.argv[sys.argv.index("--fake-devices") + 1])
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n}").strip()
 
 import numpy as np
 
@@ -240,6 +252,89 @@ def serve_stream(graph, requests, *, qps: float, ingest=None,
     return svc, served, wall
 
 
+def serve_distributed(graph, requests, *, mesh, combine="auto",
+                      controllers: int = 1, wave="auto", depth: int = 2,
+                      cache: bool = False, warm: bool = True):
+    """Multi-controller open-loop driver over the sharded engine.
+
+    ``controllers`` independent arrival processes (the open-loop request
+    list partitioned round-robin, each keeping its own arrival clock) are
+    interleaved into one pump loop — ``TCQService`` is single-writer, so
+    the controllers multiplex submissions rather than run threads, which
+    is exactly the multi-controller shape of a shard_map program: one
+    Python process per host driving a slice of the arrival load against
+    the same mesh-spanning lane pool.
+
+    Returns ``(svc, served, report)``; ``report`` carries aggregate and
+    per-controller qps / p50 / p95 / p99 plus the mesh shape, combine
+    strategy, per-shard lane occupancy and combine-collective bytes.
+    """
+    from repro.core import TCQService
+
+    svc = TCQService(graph, wave=wave, depth=depth, retain_snapshots=False,
+                     cache=cache, mesh=mesh, combine=combine)
+    if warm and requests:
+        r0 = requests[0]
+        svc.submit({k: r0[k] for k in ("k", "ts", "te")})
+        svc.run_until_idle()
+        svc.completed.clear()
+        svc.pool_log.clear()
+    n = max(1, int(controllers))
+    lanes = [sorted((r for j, r in enumerate(requests) if j % n == c),
+                    key=lambda r: r["arrive_s"]) for c in range(n)]
+    owner = {}
+    state = {"i": [0] * n, "t0": time.perf_counter()}
+
+    def poll(s):
+        now = time.perf_counter() - state["t0"]
+        for c in range(n):
+            q, i = lanes[c], state["i"][c]
+            while i < len(q) and q[i]["arrive_s"] <= now:
+                tk = s.submit(q[i])
+                owner[tk.id] = c
+                i += 1
+            state["i"][c] = i
+
+    served = []
+    while any(state["i"][c] < len(lanes[c]) for c in range(n)) or svc.pending:
+        served.extend(svc.run_until_idle(poll))
+        nxt = min((lanes[c][state["i"][c]]["arrive_s"]
+                   for c in range(n) if state["i"][c] < len(lanes[c])),
+                  default=None)
+        if nxt is not None:
+            gap = nxt - (time.perf_counter() - state["t0"])
+            if gap > 0:
+                time.sleep(min(gap, 0.05))
+    wall = time.perf_counter() - state["t0"]
+
+    def _pcts(tks):
+        lat = (np.array([tk.latency_s for tk in tks]) if tks
+               else np.array([0.0]))
+        return {"completed": len(tks),
+                "qps": len(tks) / wall if wall > 0 else 0.0,
+                "p50_ms": 1e3 * float(np.quantile(lat, .50)),
+                "p95_ms": 1e3 * float(np.quantile(lat, .95)),
+                "p99_ms": 1e3 * float(np.quantile(lat, .99))}
+
+    per = [dict(controller=c,
+                **_pcts([tk for tk in served if owner.get(tk.id) == c]))
+           for c in range(n)]
+    dist = svc.stats["distributed"]
+    occ = [p["shard_occupancy"] for p in svc.pool_log
+           if p.get("shard_occupancy")]
+    report = dict(_pcts(served))
+    report.update({
+        "controllers": per,
+        "wall_s": wall,
+        "mesh": dist["mesh"],
+        "combine": dist["combine"],
+        "collective_bytes": dist["collective_bytes"],
+        "shard_occupancy": ([float(x) for x in np.mean(occ, axis=0)]
+                            if occ else []),
+    })
+    return svc, served, report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--vertices", type=int, default=2_000)
@@ -280,8 +375,17 @@ def main():
                          "the driver idles between arrivals (0 = off)")
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map engine on the local host mesh")
-    ap.add_argument("--combine", default="rs_ag",
-                    choices=["psum", "rs_ag"])
+    ap.add_argument("--combine", default="auto",
+                    choices=["auto", "psum", "rs_ag"])
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force N virtual host devices (must be set before "
+                         "jax initializes; handled at module import)")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="devices along the model (edge-sharding) axis; "
+                         "the rest go to the lane axis")
+    ap.add_argument("--controllers", type=int, default=1,
+                    help="interleaved open-loop arrival processes in "
+                         "--distributed mode")
     args = ap.parse_args()
 
     from repro.data import TCQRequestStream
@@ -290,29 +394,34 @@ def main():
     g = powerlaw_temporal(args.vertices, args.edges, args.span, seed=3)
     lo, hi = g.span
 
+    wave = args.wave if args.wave == "auto" else int(args.wave)
+
     if args.distributed:
-        from repro.core.distributed import DistributedTCQ
         from repro.launch.mesh import make_host_mesh
 
+        mesh = make_host_mesh(args.model_shards)
         reqs = list(TCQRequestStream(lo, hi, k=args.k,
                                      span=max(64, args.span // 20),
-                                     seed=0).requests(args.requests))
-        mesh = make_host_mesh()
-        eng = DistributedTCQ(g, mesh, combine=args.combine)
-        t0 = time.perf_counter()
-        alive, tlo, thi, ne, iters = eng.query_wave(
-            [r["ts"] for r in reqs], [r["te"] for r in reqs], args.k)
-        dt = time.perf_counter() - t0
-        for i, r in enumerate(reqs):
-            print(f"req#{r['id']:03d} window=[{r['ts']},{r['te']}] -> "
-                  f"top-core TTI=[{int(tlo[i])},{int(thi[i])}] "
-                  f"|E|={int(ne[i])}")
-        print(f"[serve] distributed wave of {len(reqs)} on mesh "
-              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}: "
-              f"{dt:.3f}s ({int(iters)} peel iterations)")
+                                     seed=0).open_loop(args.requests,
+                                                       args.qps))
+        svc, served, rep = serve_distributed(
+            g, reqs, mesh=mesh, combine=args.combine,
+            controllers=args.controllers, wave=wave, depth=args.depth,
+            cache=not args.no_cache)
+        print(f"[serve] distributed: {rep['completed']} requests in "
+              f"{rep['wall_s']:.2f}s ({rep['qps']:.2f} qps aggregate) on "
+              f"mesh {rep['mesh']} (combine={rep['combine']})")
+        print(f"[serve] latency p50 {rep['p50_ms']:.1f} ms | "
+              f"p95 {rep['p95_ms']:.1f} ms | p99 {rep['p99_ms']:.1f} ms")
+        for c in rep["controllers"]:
+            print(f"[serve]   controller#{c['controller']}: "
+                  f"{c['completed']} done, {c['qps']:.2f} qps, "
+                  f"p50 {c['p50_ms']:.1f} / p95 {c['p95_ms']:.1f} / "
+                  f"p99 {c['p99_ms']:.1f} ms")
+        occ = ", ".join(f"{x:.2f}" for x in rep["shard_occupancy"])
+        print(f"[serve] per-shard lane occupancy [{occ}], "
+              f"{rep['collective_bytes']} combine-collective bytes")
         return
-
-    wave = args.wave if args.wave == "auto" else int(args.wave)
 
     if args.closed_loop:
         reqs = list(TCQRequestStream(lo, hi, k=args.k,

@@ -19,3 +19,8 @@ def pytest_configure(config):
         "cache_gate: TTI core-cache equivalence gate (CI runs "
         "`-m cache_gate` with REPRO_CACHE_GATE=1 for the widened fuzz "
         "seeds; the tests also run in plain tier-1)")
+    config.addinivalue_line(
+        "markers",
+        "dist_gate: sharded-pipeline equivalence gate (CI runs "
+        "`-m dist_gate` with REPRO_DIST_GATE=1 for the widened "
+        "multi-mesh sweep; the tests also run in plain tier-1)")
