@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 full JSON records under benchmarks/results/.  The wave-engine rows
 (bench_wave + its fused-kernel gate run_kernel + bench_pipeline +
-bench_service + bench_streaming + bench_cache + bench_distributed) are
+bench_service + bench_streaming + bench_cache + bench_chaos incl. its
+kill-anywhere durability drill + bench_distributed) are
 additionally folded into the
 repo-root ``BENCH_wave.json`` so the wave-mode perf trajectory is
 tracked across PRs; bench_wave.run_kernel raises on fused-vs-composite
@@ -233,7 +234,8 @@ def main() -> None:
         trajectory["chaos"] = crows
         for r in crows:
             if r["bench"] == "chaos":
-                row(f"chaos/{r['scenario']}/s{r['seed']}", r["wall_s"],
+                row(f"chaos/{r['scenario']}/s{r['seed']}",
+                    r.get("wall_s", 0.0),
                     f"equivalent={r['equivalent']} "
                     f"demotions={r.get('demotions', 0)}")
             else:
@@ -241,6 +243,33 @@ def main() -> None:
                     f"shed_rate={r['shed_rate']:.2f} "
                     f"p99={r['p99_ms']:.0f}ms "
                     f"timeouts={r['timeouts']}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    try:
+        # durability gate: the kill-anywhere drill (crash after every
+        # journal record + torn/corrupt post-mortems) must recover to a
+        # bit-identical drain over each surviving prefix — the module
+        # raises on any divergence, lost admission, or lineage mismatch
+        wrows = bench_chaos.run_durability()
+        trajectory["durability"] = wrows
+        for r in wrows:
+            if r["scenario"] == "kill":
+                row(f"durability/kill@{r['crash_after_record']}",
+                    r["recover_s"],
+                    f"tail={r['tail_records']} "
+                    f"requeued={r['requeued']} "
+                    f"equivalent={r['equivalent']}")
+            elif r["scenario"] == "summary":
+                row("durability/summary", r["max_recover_s"],
+                    f"records={r['journal_records']} "
+                    f"kill_points={r['kill_points']}")
+            else:
+                row(f"durability/{r['scenario']}", r["recover_s"],
+                    f"tail={r['tail_records']} "
+                    f"skipped_snaps={r.get('snapshots_skipped', 0)} "
+                    f"equivalent={r['equivalent']}")
     except Exception:
         failures += 1
         traceback.print_exc()
@@ -272,7 +301,8 @@ def main() -> None:
     # runs never overwrite the measured numbers)
     if not SMOKE and \
             {"wave", "kernel", "pipeline", "service", "streaming",
-             "cache", "chaos", "distributed"} <= trajectory.keys():
+             "cache", "chaos", "durability",
+             "distributed"} <= trajectory.keys():
         out = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_wave.json")
         with open(out, "w") as f:

@@ -13,6 +13,8 @@ Public API:
   tcd / tcd_batch    — the TCD operation (truncate + frontier peel + TTI)
   brute_force_query  — oracle
   PHCIndex / iphc_query — the paper's baseline (Algorithm 1)
+  WriteAheadLog      — durable streaming: append-only CRC-checked journal
+                       (TCQService(wal_dir=...) / TCQService.recover)
 """
 
 from repro.core.baseline import PHCIndex, iphc_query  # noqa: F401
@@ -29,5 +31,7 @@ from repro.core.scheduler import (EmptyStaircase, QueryState,  # noqa: F401
 from repro.core.service import (TCQService, TCQTicket,  # noqa: F401
                                 cluster_windows)
 from repro.core.tcd import TCDResult, coreness, tcd, tcd_batch  # noqa: F401
+from repro.core.wal import (SnapshotCorruption, WALError,  # noqa: F401
+                            WALRecord, WALReplayError, WriteAheadLog)
 from repro.core.wave import (DegradationLadder,  # noqa: F401
                              ResilienceConfig, make_oracle_step_fn)

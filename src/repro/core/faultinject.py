@@ -35,6 +35,7 @@ GraphIngestError`) without perturbing the graph.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, List, Mapping, Optional, Tuple
 
@@ -105,6 +106,110 @@ def rung_faults(plans: Mapping[str, FaultPlan]
         plan = plans.get(name)
         return fn if plan is None else FaultyStep(fn, plan)
     return wrapper
+
+
+# ------------------------------------------------------- durability injectors
+class InjectedCrash(BaseException):
+    """A simulated process death at an exact journal point.
+
+    Deliberately a ``BaseException``: service code that caught
+    ``Exception`` to degrade gracefully would otherwise swallow the
+    "kill" and keep running past the point the drill meant to stop at —
+    a real ``kill -9`` is not catchable either.
+    """
+
+
+class CrashingWAL:
+    """Wrap a :class:`~repro.core.wal.WriteAheadLog` so the process
+    "dies" at a chosen journal point (the kill-anywhere drill's knife).
+
+    ``crash_after_records=n`` raises :class:`InjectedCrash` *after* the
+    n-th successful append (0-based: ``0`` dies right after the first
+    record lands) — the record is on disk, its acknowledgement never
+    happened, exactly the torn-world a mid-operation kill leaves.
+    ``crash_on_rotate=True`` dies after the rotation seals the old
+    segment but *before* the caller writes its snapshot — the
+    checkpoint's worst-case ordering.  ``mutilate`` (called with the
+    journal directory) runs post-mortem damage — truncation, bit flips —
+    before the drill hands the directory to ``recover``.
+
+    Everything else proxies to the wrapped log, so the service under
+    test is byte-for-byte the production code path.
+    """
+
+    def __init__(self, inner, *, crash_after_records: Optional[int] = None,
+                 crash_on_rotate: bool = False,
+                 mutilate: Optional[Callable[[str], None]] = None):
+        self._inner = inner
+        self._crash_after = crash_after_records
+        self._crash_on_rotate = crash_on_rotate
+        self._mutilate = mutilate
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def _die(self, where: str):
+        if self._mutilate is not None:
+            self._inner.close()
+            self._mutilate(self._inner.dir)
+        raise InjectedCrash(f"injected crash {where}")
+
+    def append(self, kind, meta=None, arrays=None) -> int:
+        idx = self._inner.append(kind, meta, arrays)
+        if self._crash_after is not None and idx >= self._crash_after:
+            self._die(f"after journal record {idx}")
+        return idx
+
+    def rotate(self) -> int:
+        seq = self._inner.rotate()
+        if self._crash_on_rotate:
+            self._die(f"after segment rotation to {seq} (pre-snapshot)")
+        return seq
+
+
+def torn_tail(wal_dir: str, nbytes: int = 5) -> str:
+    """Post-mortem torn write: chop ``nbytes`` off the newest journal
+    segment's tail (models a partial page flush at power loss).  Returns
+    the mutilated path."""
+    from repro.core.wal import list_segments
+
+    seq, path = list_segments(wal_dir)[-1]
+    size = max(0, os.path.getsize(path) - int(nbytes))
+    with open(path, "r+b") as f:
+        f.truncate(size)
+    return path
+
+
+def flip_tail_byte(wal_dir: str, offset_from_end: int = 3) -> str:
+    """Post-mortem bit rot: XOR one byte near the newest segment's tail
+    (CRC must catch it — a flipped record is corrupt, not just short)."""
+    from repro.core.wal import list_segments
+
+    seq, path = list_segments(wal_dir)[-1]
+    size = os.path.getsize(path)
+    pos = max(0, size - int(offset_from_end))
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1) or b"\0"
+        f.seek(pos)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return path
+
+
+def corrupt_snapshot(wal_dir: str, offset: int = 256) -> str:
+    """Post-mortem snapshot damage: XOR one byte of the *newest*
+    snapshot file, so its embedded checksum fails and recovery must fall
+    back to the previous retained snapshot."""
+    from repro.core.wal import list_snapshots
+
+    seq, path = list_snapshots(wal_dir)[-1]
+    pos = min(int(offset), os.path.getsize(path) - 1)
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1)
+        f.seek(pos)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return path
 
 
 # ---------------------------------------------------------- malformed ingest

@@ -431,6 +431,27 @@ class TemporalGraph:
         per_pair = 4 * 2 + 4 * 2 * 2  # pair_u/v + half pairs (src,pair)x2
         return self.num_edges * per_edge + self.num_pairs * per_pair
 
+    def fingerprint(self) -> int:
+        """CRC32 over the canonical arrays + counts — a cheap structural
+        identity for lineage-checked WAL replay.  Two graphs with equal
+        fingerprints have byte-identical canonical TELs (same edges, same
+        pair factorization, same epoch), so a replayed ``add_edges`` can
+        be verified against the fingerprint its journal record promised.
+        ``uid``/``parent_uid`` are process-local and deliberately
+        excluded: lineage across restarts is exactly what the
+        fingerprint replaces.
+        """
+        import zlib
+
+        c = zlib.crc32(
+            np.int64([self.num_vertices, self.epoch, self.num_edges,
+                      self.num_pairs]).tobytes())
+        for name in self._STATE_ARRAYS:
+            a = np.ascontiguousarray(getattr(self, name))
+            a = a.astype(a.dtype.newbyteorder("<"), copy=False)
+            c = zlib.crc32(a.tobytes(), c)
+        return c
+
     # ----------------------------------------------------------- persistence
     _STATE_ARRAYS = ("src", "dst", "t", "pair_id", "pair_u", "pair_v",
                      "unique_ts")

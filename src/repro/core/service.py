@@ -48,6 +48,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import wal as walmod
 from repro.core.graph import TemporalGraph
 from repro.core.otcd import TCQEngine
 from repro.core.results import QueryStats, TCQResult
@@ -178,6 +179,19 @@ class TCQService:
         whose every cell resolves never joins a pool (and never widens a
         cluster's union window); peeled cells are inserted as they
         retire; ingest invalidates incrementally (see ``update_graph``).
+    wal_dir / fsync / wal:
+        Durability (``core.wal``).  ``wal_dir`` attaches a write-ahead
+        journal: every accepted mutation — edge batch, ticket admission,
+        cancellation, external snapshot install — is logged *before* it
+        is applied, so :meth:`recover` can rebuild the exact pre-crash
+        state from the newest valid snapshot plus the journal tail.
+        ``fsync`` picks the flush policy (``always``/``batch``/``off``,
+        see :class:`~repro.core.wal.WriteAheadLog`).  ``wal=`` accepts a
+        pre-built (or fault-injecting) log instance directly and wins
+        over ``wal_dir``.  If the directory holds no snapshot yet, a
+        genesis checkpoint of the initial graph is written so recovery
+        is always total.  Default (all None): no journal — the PR 5
+        snapshot-only behavior.
 
     Usage::
 
@@ -200,7 +214,9 @@ class TCQService:
                  use_kernel: Optional[bool] = None,
                  retain_snapshots: bool = True,
                  resilience=None, cache=True,
-                 mesh=None, combine: str = "auto"):
+                 mesh=None, combine: str = "auto",
+                 wal_dir: Optional[str] = None, fsync: str = "batch",
+                 wal=None):
         if engine is None:
             if graph is None:
                 raise ValueError("need a graph or an engine")
@@ -211,6 +227,18 @@ class TCQService:
         self.wave = wave
         self.depth = int(depth)
         self.cluster_gap = int(cluster_gap)
+        # --- durability: write-ahead journal (core.wal).  _replaying
+        # suppresses the hooks while recover() feeds journal records back
+        # through the very paths that wrote them.
+        self._replaying = False
+        self.recovery_report: Optional[Dict] = None
+        if wal is not None:
+            self.wal = wal
+        elif wal_dir is not None:
+            self.wal = walmod.WriteAheadLog(wal_dir, fsync=fsync)
+        else:
+            self.wal = None
+        self.retained_checkpoints = 2   # corrupt-newest fallback stays lossless
         # arrival-process window histogram: (k, h, ts, te) -> count.
         # prewarm() peels the hottest uncached windows during idle time so
         # recurring traffic hits a warm cache.
@@ -223,9 +251,26 @@ class TCQService:
         self.retain_snapshots = bool(retain_snapshots)
         self._pending: Deque[TCQTicket] = deque()
         self._fresh: List[TCQTicket] = []   # resolved-at-submit tickets
+        # live pool members (pump removes them from _pending while lanes
+        # run) — snapshot() must still see the unresolved ones, or a
+        # checkpoint taken from a mid-pool poll/admit hook would drop them
+        self._inflight: List[TCQTicket] = []
         self.completed: List[TCQTicket] = []
         self._next_id = 0
         self.pool_log: List[Dict] = []      # one record per pool run
+        if (self.wal is not None
+                and not walmod.list_snapshots(self.wal.dir)):
+            # genesis checkpoint: a directory with no snapshot would make
+            # recover() partial (nothing to replay the tail onto), so the
+            # initial graph is persisted at the active sequence number —
+            # every later journal record lands in a segment >= it
+            self._write_snapshot_file(self.wal.active_seq)
+
+    def _journal(self, kind: str, meta: Dict, arrays=None) -> None:
+        """Append one write-ahead record (no-op without a journal, and
+        during :meth:`recover`'s replay of the very records being read)."""
+        if self.wal is not None and not self._replaying:
+            self.wal.append(kind, meta, arrays)
 
     # ------------------------------------------------------------- ingestion
     @property
@@ -238,15 +283,39 @@ class TCQService:
 
     def push_edges(self, u, v, t) -> int:
         """Merge-append an arrival batch; returns the new epoch.  O(E+B)
-        host work; in-flight/pending tickets keep their pinned snapshot."""
+        host work; in-flight/pending tickets keep their pinned snapshot.
+
+        With a journal attached, the batch is logged *after* validation
+        (``add_edges`` raising means the batch was never accepted — a
+        rejected batch must not be replayed) but *before* the engine
+        installs the new epoch, together with the post-state the replay
+        must reproduce (edge/pair/vertex counts and the canonical-array
+        fingerprint — the lineage check, since ``uid`` is process-local).
+        """
         g = self.engine.graph.add_edges(u, v, t)
         if g is self.engine.graph:          # empty/self-loop-only batch
             return self.engine.epoch
+        if self.wal is not None and not self._replaying:
+            self._journal("edges", {
+                "graph_epoch": int(g.epoch),
+                "num_edges": g.num_edges, "num_pairs": g.num_pairs,
+                "num_vertices": int(g.num_vertices),
+                "fingerprint": g.fingerprint(),
+            }, {"u": np.asarray(u), "v": np.asarray(v),
+                "t": np.asarray(t)})
         return self.engine.update_graph(g)
 
     def ingest_graph(self, graph: TemporalGraph) -> int:
         """Install an externally built snapshot (``EdgeStream`` subscriber
-        form: ``stream.subscribe(svc.ingest_graph)``)."""
+        form: ``stream.subscribe(svc.ingest_graph)``).  Journaled as the
+        graph's full canonical state (there is no batch to re-derive it
+        from), fingerprint-checked on replay like :meth:`push_edges`."""
+        if self.wal is not None and not self._replaying:
+            self._journal("install", {
+                "graph_epoch": int(graph.epoch),
+                "num_vertices": int(graph.num_vertices),
+                "fingerprint": graph.fingerprint(),
+            }, graph.state_dict())
         return self.engine.update_graph(graph)
 
     def connect(self, stream) -> None:
@@ -270,6 +339,18 @@ class TCQService:
         uts = uts[(uts >= int(r["ts"])) & (uts <= int(r["te"]))]
         uts = uts.astype(np.int64)
         dl = r.get("deadline_s")
+        # write-ahead: the admission record precedes the enqueue, so a
+        # crash between the two replays the admission (at-least-once;
+        # results are deterministic in the request + pinned epoch).
+        # ids are sequential and every admission is journaled, so replay
+        # reproduces them exactly (recover() asserts this).
+        self._journal("submit", {
+            "id": int(self._next_id), "k": int(r["k"]),
+            "h": int(r.get("h", 1)), "ts": int(r["ts"]),
+            "te": int(r["te"]), "priority": int(r.get("priority", 0)),
+            "deadline_s": None if dl is None else float(dl),
+            "submit_unix_s": time.time(),
+        })
         tk = TCQTicket(id=self._next_id, k=int(r["k"]),
                        h=int(r.get("h", 1)), ts=int(r["ts"]),
                        te=int(r["te"]), epoch=self.engine.epoch, graph=g,
@@ -309,6 +390,7 @@ class TCQService:
         """
         if tk.done:
             return False
+        self._journal("cancel", {"id": int(tk.id), "status": str(status)})
         now = time.perf_counter()
         tk.status = status
         if tk.state is not None:
@@ -410,6 +492,11 @@ class TCQService:
         if poll is not None:
             poll(self)
         self.expire()
+        if self.wal is not None:
+            # batch fsync barrier: everything journaled since the last
+            # pump (arrivals, ingest from the poll hook) becomes durable
+            # before the pool claims the device
+            self.wal.sync()
         if self.engine.core_cache is not None:
             # admission-time lookup: tickets served entirely by the TTI
             # cache resolve here — they never join a pool, never widen a
@@ -436,6 +523,7 @@ class TCQService:
             if any(cand[i] is head for i in c))
         for tk in members:
             self._pending.remove(tk)
+        self._inflight = members    # same list object: grows with admits
         pool_lo = min(tk.window[0] for tk in members)
         pool_hi = max(tk.window[1] for tk in members)
         pipe, wt, wave = self.engine.make_pool(
@@ -487,6 +575,7 @@ class TCQService:
             tk.result.stats.absorb_pool(pool_stats,
                                         window_edges=wt.window_edges,
                                         batch_size=len(members))
+        self._inflight = []
         # drop window TELs / pair tables of epochs no ticket pins anymore
         self.engine.retire_epochs({t.epoch for t in self._pending})
         fresh, self._fresh = self._fresh, []
@@ -570,6 +659,8 @@ class TCQService:
         out["pending"] = len(self._pending)
         out["completed"] = len(self.completed)
         out["prewarmed"] = self._prewarmed
+        if self.wal is not None:
+            out["wal"] = self.wal.stats()
         return out
 
     # ------------------------------------------------------- crash recovery
@@ -579,15 +670,20 @@ class TCQService:
         (deadlines stored as *remaining* seconds — wall-clock restarts).
 
         Pools run synchronously inside :meth:`pump`, so between pumps the
-        queue is the complete in-flight set; restoring a snapshot and
-        draining it yields bit-identical results to never having stopped
-        (resolved tickets are the driver's to persist — they are not part
-        of service state).
+        queue is the complete in-flight set; a snapshot taken from a
+        mid-pool ``poll``/admit hook additionally records the live pool's
+        unresolved members (``_inflight``) as queued again — on restore
+        they re-run from scratch, which is bit-identical because results
+        are deterministic in (k, h, window, pinned epoch).  Restoring a
+        snapshot and draining it therefore yields the same results as
+        never having stopped (resolved tickets are the driver's to
+        persist — they are not part of service state).
         """
         now = time.perf_counter()
+        live = [tk for tk in self._inflight if not tk.done]
         graphs: Dict[int, Dict] = {self.engine.epoch:
                                    self.engine.graph.state_dict()}
-        for tk in self._pending:
+        for tk in list(self._pending) + live:
             if tk.epoch not in graphs:
                 graphs[tk.epoch] = tk.graph.state_dict()
         snap = {
@@ -604,7 +700,7 @@ class TCQService:
                 "epoch": tk.epoch, "priority": tk.priority,
                 "deadline_rem_s": (None if tk.deadline is None
                                    else tk.deadline - now),
-            } for tk in self._pending],
+            } for tk in list(self._pending) + live],
         }
         if self.engine.core_cache is not None:
             # additive field (format stays version 1): a restoring service
@@ -653,35 +749,205 @@ class TCQService:
             svc.engine.core_cache.load_state(cache_state)
         return svc
 
-    def save_snapshot(self, path_or_file) -> None:
+    def save_snapshot(self, path_or_file, *,
+                      wal_seq: Optional[int] = None) -> None:
         """Persist :meth:`snapshot` as a single ``.npz`` (graph arrays +
-        a JSON metadata record) — no pickle, loadable anywhere."""
+        a JSON metadata record) — no pickle, loadable anywhere.
+
+        The write is *atomic and self-verifying*: file-path targets go
+        through a sibling ``.tmp`` + ``os.replace`` (a crash mid-save
+        leaves any previous snapshot at that path untouched), and a
+        whole-file CRC32 is embedded in the metadata record so
+        :meth:`load_snapshot` / :meth:`recover` detect a damaged file
+        instead of restoring from it.  ``wal_seq`` stamps the journal
+        segment this snapshot seals (set by :meth:`checkpoint`)."""
         snap = self.snapshot()
+        if wal_seq is not None:
+            snap["wal_seq"] = int(wal_seq)
         arrays = {}
         for e, sd in snap.pop("graphs").items():
             for name, arr in sd.items():
                 arrays[f"g{int(e)}__{name}"] = np.asarray(arr)
         for name, arr in snap.pop("cache", {}).items():
             arrays[f"cache__{name}"] = np.asarray(arr)
-        np.savez(path_or_file, meta=np.frombuffer(
-            json.dumps(snap).encode(), dtype=np.uint8), **arrays)
+        walmod.write_snapshot_atomic(path_or_file, snap, arrays)
 
-    @classmethod
-    def load_snapshot(cls, path_or_file, **kwargs) -> "TCQService":
-        """Inverse of :meth:`save_snapshot`."""
-        with np.load(path_or_file, allow_pickle=False) as z:
-            snap = json.loads(bytes(z["meta"]).decode())
-            graphs: Dict[int, Dict] = {}
-            cache: Dict[str, np.ndarray] = {}
-            for key in z.files:
-                if key == "meta":
-                    continue
-                tag, name = key.split("__", 1)
-                if tag == "cache":
-                    cache[name] = z[key]
-                else:
-                    graphs.setdefault(int(tag[1:]), {})[name] = z[key]
+    @staticmethod
+    def _parse_snapshot_file(path_or_file) -> Dict:
+        """Read + checksum-verify one snapshot file back into the
+        :meth:`snapshot` dict form (raises
+        :class:`~repro.core.wal.SnapshotCorruption` on damage)."""
+        snap, flat = walmod.read_snapshot(path_or_file)
+        graphs: Dict[int, Dict] = {}
+        cache: Dict[str, np.ndarray] = {}
+        for key, arr in flat.items():
+            tag, name = key.split("__", 1)
+            if tag == "cache":
+                cache[name] = arr
+            else:
+                graphs.setdefault(int(tag[1:]), {})[name] = arr
         snap["graphs"] = graphs
         if cache:
             snap["cache"] = cache
-        return cls.restore(snap, **kwargs)
+        return snap
+
+    @classmethod
+    def load_snapshot(cls, path_or_file, **kwargs) -> "TCQService":
+        """Inverse of :meth:`save_snapshot` (checksum-verified)."""
+        return cls.restore(cls._parse_snapshot_file(path_or_file),
+                           **kwargs)
+
+    # ------------------------------------------------------------ durability
+    def _write_snapshot_file(self, seq: int) -> str:
+        path = walmod.snapshot_path(self.wal.dir, seq)
+        self.save_snapshot(path, wal_seq=seq)
+        return path
+
+    def checkpoint(self) -> Dict:
+        """Durable checkpoint: seal the active journal segment, persist
+        the current service state under the *new* segment's sequence
+        number, then garbage-collect history older than the oldest
+        retained checkpoint.
+
+        Crash-ordering: a crash after the rotation but before the
+        snapshot lands simply means recovery uses the previous snapshot
+        and replays one segment more; a crash mid-snapshot-write leaves
+        only a ``.tmp`` (swept by GC).  Retaining
+        ``retained_checkpoints`` (default 2) snapshots — and every
+        segment at or above the *oldest* retained one — makes the
+        corrupt-newest-snapshot fallback lossless: the older snapshot's
+        whole tail is still on disk.
+        """
+        if self.wal is None:
+            raise walmod.WALError("checkpoint() needs a wal_dir")
+        t0 = time.perf_counter()
+        seq = self.wal.rotate()
+        path = self._write_snapshot_file(seq)
+        snaps = walmod.list_snapshots(self.wal.dir)
+        keep = [s for s, _ in snaps][-max(1, int(self.retained_checkpoints)):]
+        removed = self.wal.gc(keep[0])
+        return {"path": path, "wal_seq": seq, "gc_removed": len(removed),
+                "checkpoint_s": time.perf_counter() - t0}
+
+    @classmethod
+    def recover(cls, wal_dir: str, *, fsync: str = "batch",
+                **kwargs) -> "TCQService":
+        """Point-in-time crash recovery: newest valid snapshot + journal
+        tail replay.
+
+        Walks the directory's snapshots newest-first, skipping any that
+        fail their checksum or parse (satellite contract: fall back, do
+        not die mid-recovery), restores the first valid one, then
+        replays every sealed journal segment at or after its ``wal_seq``
+        through the real :meth:`submit` / ``add_edges`` /
+        :meth:`cancel` paths — so the recovered queue, epoch numbering
+        and pinned snapshots are exactly what an uninterrupted run would
+        hold, and a subsequent drain is bit-identical.  A torn or
+        corrupted record ends the replay at the last acknowledged
+        operation (it is detected via CRC, reported in
+        ``recovery_report["tail_events"]``, and physically truncated —
+        never silently replayed).  Replay *verifies* as it goes: every
+        re-ingested graph must match its record's fingerprint/counts and
+        every re-admitted ticket its recorded id, else
+        :class:`~repro.core.wal.WALReplayError`.
+
+        The returned service has a fresh active segment and journals new
+        mutations immediately; ``recovery_report`` carries the snapshot
+        used, snapshots skipped, records replayed, tail events, and
+        wall-clock recovery time (the drill's curve datum).
+        """
+        t0 = time.perf_counter()
+        snaps = walmod.list_snapshots(wal_dir)
+        if not snaps:
+            raise walmod.WALError(f"no snapshot in {wal_dir!r} — nothing "
+                                  "to recover (genesis missing?)")
+        svc = None
+        skipped = []
+        kwargs.pop("wal", None)         # the journal is attached after
+        kwargs.pop("wal_dir", None)     # replay, never during restore
+        for seq, path in reversed(snaps):
+            try:
+                snap = cls._parse_snapshot_file(path)
+                svc = cls.restore(snap, **kwargs)
+                snap_seq, snap_path = seq, path
+                break
+            except (walmod.SnapshotCorruption, ValueError, KeyError) as e:
+                skipped.append({"path": path, "error": repr(e)})
+        if svc is None:
+            raise walmod.WALError(
+                f"every snapshot in {wal_dir!r} is corrupt: {skipped}")
+        from_seq = int(snap.get("wal_seq", snap_seq))
+        wal = walmod.WriteAheadLog(wal_dir, fsync=fsync)
+        svc._replaying = True
+        replayed = 0
+        try:
+            for rec in wal.replay(from_seq):
+                svc._replay_record(rec)
+                replayed += 1
+        finally:
+            svc._replaying = False
+        svc.wal = wal
+        svc.recovery_report = {
+            "snapshot": snap_path,
+            "snapshot_seq": int(snap_seq),
+            "snapshots_skipped": skipped,
+            "wal_records": replayed,
+            "tail_events": list(wal.tail_events),
+            "pending_after": len(svc._pending),
+            "epoch_after": int(svc.epoch),
+            "recover_s": time.perf_counter() - t0,
+        }
+        return svc
+
+    def _replay_record(self, rec) -> None:
+        """Apply one journal record through the live mutation paths."""
+        kind, meta = rec.kind, rec.meta
+        if kind == "submit":
+            req = {"k": meta["k"], "h": meta["h"], "ts": meta["ts"],
+                   "te": meta["te"], "priority": meta["priority"]}
+            if meta.get("deadline_s") is not None:
+                req["deadline_s"] = meta["deadline_s"]
+            tk = self.submit(req)
+            if tk.id != int(meta["id"]):
+                raise walmod.WALReplayError(
+                    f"replayed admission got id {tk.id}, journal "
+                    f"recorded {meta['id']} — admission history is "
+                    "incomplete or reordered")
+        elif kind == "cancel":
+            want = int(meta["id"])
+            for tk in list(self._pending):
+                if tk.id == want:
+                    self.cancel(tk, status=meta["status"])
+                    break
+            # absent ids resolved before ever queueing (empty windows) —
+            # the original cancel was a no-op on service state too
+        elif kind == "edges":
+            g = self.engine.graph.add_edges(
+                rec.arrays["u"], rec.arrays["v"], rec.arrays["t"])
+            self._check_lineage(g, meta)
+            self.engine.update_graph(g)
+        elif kind == "install":
+            g = TemporalGraph.from_state(rec.arrays)
+            self._check_lineage(g, meta)
+            self.engine.update_graph(g)
+        else:
+            raise walmod.WALReplayError(f"unknown journal record kind "
+                                        f"{kind!r}")
+
+    @staticmethod
+    def _check_lineage(g: TemporalGraph, meta: Dict) -> None:
+        """Lineage check: the replayed graph must be byte-identical to
+        the one the journal acknowledged (``uid`` lineage is
+        process-local, so identity across restarts rests on the
+        canonical-array fingerprint)."""
+        got = {"graph_epoch": int(g.epoch),
+               "num_vertices": int(g.num_vertices),
+               "fingerprint": g.fingerprint()}
+        if "num_edges" in meta:
+            got["num_edges"] = g.num_edges
+            got["num_pairs"] = g.num_pairs
+        want = {k: meta[k] for k in got}
+        if got != want:
+            raise walmod.WALReplayError(
+                f"replayed graph diverged from journal: got {got}, "
+                f"recorded {want}")

@@ -191,7 +191,8 @@ def serve_closed_loop(graph, requests, *, concurrency: int = 8,
 
 def serve_stream(graph, requests, *, qps: float, ingest=None,
                  wave="auto", depth: int = 2, cluster_gap: int = 0,
-                 warm: bool = True, cache=True, prewarm: int = 0):
+                 warm: bool = True, cache=True, prewarm: int = 0,
+                 wal_dir=None, fsync: str = "batch", svc=None):
     """Drive a TCQService with an open-loop arrival schedule.
 
     ``requests`` is a list of dicts with an ``arrive_s`` offset
@@ -200,14 +201,21 @@ def serve_stream(graph, requests, *, qps: float, ingest=None,
     ``prewarm`` > 0 peels up to that many of the hottest observed windows
     into the TTI core cache whenever the driver goes idle between
     arrivals (``TCQService.prewarm``) — idle lanes buy warm hits for the
-    recurring traffic.  Returns (service, served tickets, wall seconds).
+    recurring traffic.  ``wal_dir``/``fsync`` attach a write-ahead
+    journal so every admission and ingest batch survives a crash
+    (``TCQService.recover``); pass a pre-built ``svc`` (e.g. one that
+    was just recovered) to drive it instead of constructing a fresh
+    service.  Returns (service, served tickets, wall seconds).
     """
     from repro.core import TCQService
 
-    # retain_snapshots=False: a long-lived server must not keep one O(E)
-    # graph snapshot alive per ingested epoch through its ticket history
-    svc = TCQService(graph, wave=wave, depth=depth, cluster_gap=cluster_gap,
-                     retain_snapshots=False, cache=cache)
+    if svc is None:
+        # retain_snapshots=False: a long-lived server must not keep one
+        # O(E) graph snapshot alive per ingested epoch through its
+        # ticket history
+        svc = TCQService(graph, wave=wave, depth=depth,
+                         cluster_gap=cluster_gap, retain_snapshots=False,
+                         cache=cache, wal_dir=wal_dir, fsync=fsync)
     if warm and requests:
         # warm the compile caches so latency percentiles measure the
         # steady state, not first-shape compilation
@@ -386,6 +394,19 @@ def main():
     ap.add_argument("--controllers", type=int, default=1,
                     help="interleaved open-loop arrival processes in "
                          "--distributed mode")
+    ap.add_argument("--wal-dir", default=None,
+                    help="write-ahead journal directory: every admission "
+                         "and ingest batch is logged before it is applied; "
+                         "on start, an existing journal is recovered "
+                         "(newest valid snapshot + tail replay) and served "
+                         "from, and a checkpoint is written on clean exit")
+    ap.add_argument("--fsync", default="batch",
+                    choices=["always", "batch", "off"],
+                    help="journal flush policy: 'always' fsyncs every "
+                         "record (no acknowledged op can be lost), "
+                         "'batch' fsyncs at pump boundaries (bounded loss "
+                         "on power failure only), 'off' leaves flushing "
+                         "to the OS")
     args = ap.parse_args()
 
     from repro.data import TCQRequestStream
@@ -452,10 +473,36 @@ def main():
     arrivals = ((u, v, t + hi) for u, v, t in
                 EdgeStream.replay(future, max(1, args.ingest_batches)))
 
+    svc = None
+    if args.wal_dir is not None:
+        from repro.core import TCQService
+        from repro.core.wal import list_snapshots
+
+        if list_snapshots(args.wal_dir):
+            # recovery-on-start: pick up exactly where the previous
+            # process died — queued tickets drain first, then new traffic
+            svc = TCQService.recover(args.wal_dir, fsync=args.fsync,
+                                     wave=wave, depth=args.depth,
+                                     retain_snapshots=False,
+                                     cache=not args.no_cache)
+            rr = svc.recovery_report
+            print(f"[serve] recovered from {rr['snapshot']} + "
+                  f"{rr['wal_records']} journal records in "
+                  f"{1e3 * rr['recover_s']:.1f} ms "
+                  f"({rr['pending_after']} tickets re-queued, epoch "
+                  f"{rr['epoch_after']}"
+                  + (f", {len(rr['tail_events'])} torn/corrupt tail "
+                     f"records cut" if rr["tail_events"] else "")
+                  + (f", {len(rr['snapshots_skipped'])} corrupt "
+                     f"snapshots skipped" if rr["snapshots_skipped"]
+                     else "") + ")")
+
     svc, served, wall = serve_stream(g, reqs, qps=args.qps, ingest=arrivals,
                                      wave=wave, depth=args.depth,
                                      cache=not args.no_cache,
-                                     prewarm=args.prewarm)
+                                     prewarm=args.prewarm,
+                                     wal_dir=args.wal_dir, fsync=args.fsync,
+                                     svc=svc)
     lat = np.array([tk.latency_s for tk in served])
     occ = [p["occupancy"] for p in svc.pool_log if p["device_steps"]]
     mid = sum(p["admitted_midflight"] for p in svc.pool_log)
@@ -474,6 +521,15 @@ def main():
           f"{mid} mid-flight admissions, "
           f"{sum(tk.status == 'timeout' for tk in served)} deadline timeouts")
     print(_cache_report(svc.stats))
+    if svc.wal is not None:
+        ck = svc.checkpoint()
+        ws = svc.wal.stats()
+        print(f"[serve] journal: {ws['records_appended']} records / "
+              f"{ws['bytes_appended']} bytes appended "
+              f"(fsync={ws['fsync']}, {ws['syncs']} syncs); clean-exit "
+              f"checkpoint seq {ck['wal_seq']} in "
+              f"{1e3 * ck['checkpoint_s']:.1f} ms "
+              f"({ck['gc_removed']} files GC'd)")
 
 
 if __name__ == "__main__":

@@ -24,3 +24,9 @@ def pytest_configure(config):
         "dist_gate: sharded-pipeline equivalence gate (CI runs "
         "`-m dist_gate` with REPRO_DIST_GATE=1 for the widened "
         "multi-mesh sweep; the tests also run in plain tier-1)")
+    config.addinivalue_line(
+        "markers",
+        "wal_gate: write-ahead-journal durability gate — kill-anywhere "
+        "crash recovery must be bit-identical (CI runs `-m wal_gate` "
+        "with REPRO_WAL_GATE=1 for the every-record kill sweep; the "
+        "tests also run, sampled, in plain tier-1)")

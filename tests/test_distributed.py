@@ -333,6 +333,83 @@ def test_mesh_equivalence_subprocess():
     assert "OK" in out.stdout
 
 
+_SHARD_FAULT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys; sys.path.insert(0, "src")
+import jax
+from repro.core import ResilienceConfig, TCQService
+from repro.core.faultinject import FaultPlan, FaultyStep
+from repro.graphs import powerlaw_temporal
+
+g = powerlaw_temporal(64, 192, 128, seed=9)
+lo, hi = g.span
+third = (hi - lo) // 3
+reqs = []                      # two disjoint groups -> two pools/ladders
+for base in (lo, lo + 2 * third):
+    for i in range(3):
+        reqs.append(dict(k=2, ts=int(base + i),
+                         te=int(min(base + third - i, hi))))
+
+
+def digest(tickets):
+    return [sorted((k, tuple(c.vertices.tolist()), c.n_edges)
+                   for k, c in t.result.by_tti().items())
+            for t in sorted(tickets, key=lambda t: t.id)]
+
+
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+
+
+def drain(wrapper):
+    svc = TCQService(g, mesh=mesh, use_kernel=True, cache=False,
+                     retain_snapshots=False,
+                     resilience=ResilienceConfig(seed=0,
+                                                 rung_wrapper=wrapper))
+    for r in reqs:
+        svc.submit(dict(r))
+    return svc, digest(svc.run_until_idle())
+
+
+_, want = drain(None)
+
+state = {"armed": True}
+
+
+def one_shot(name, fn):
+    # ladders build per window pool: arm exactly one pool's kernel rung
+    if name == "pallas" and state["armed"]:
+        state["armed"] = False
+        return FaultyStep(fn, FaultPlan(fail_at=(0,)))
+    return fn
+
+
+svc, got = drain(one_shot)
+demo = [e for e in svc.engine.resilience_events()
+        if e.get("reason") == "error"]
+assert not state["armed"], "no pallas rung was ever built"
+assert len(demo) == 1, f"expected exactly one demotion: {demo}"
+assert got == want, "sharded drain diverged after per-shard rung fault"
+backends = [p.get("backend") for p in svc.pool_log]
+assert "pallas" in backends, f"healthy pool left the kernel: {backends}"
+print("OK")
+"""
+
+
+@pytest.mark.dist_gate
+def test_sharded_rung_fault_demotes_one_pool_subprocess():
+    """Per-shard kernel fault on an 8-device lane-sharded mesh: only the
+    faulted pool's ShardedDegradationLadder demotes (one event, reason
+    'error'), the other pool stays on the fused kernel, and the whole
+    drain is bit-identical to the fault-free sharded run."""
+    out = subprocess.run([sys.executable, "-c", _SHARD_FAULT],
+                         capture_output=True, text=True, cwd="/root/repo",
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
 def test_dryrun_smoke_subprocess():
     """The dry-run entrypoint itself (reduced configs, real 512-device mesh
     construction) — proves the mesh + lowering pipeline end to end."""

@@ -1,0 +1,379 @@
+"""Durable streaming: write-ahead journal + point-in-time crash recovery.
+
+``wal_gate``-marked tests are the durability gate: a service killed at
+*any* journal point — after each record, mid-record (torn tail), under
+bit rot, with its newest snapshot corrupted — must recover to a drain
+bit-identical to the uninterrupted run over the surviving journal
+prefix, and damaged tails must be *detected and cut*, never silently
+replayed.  CI runs them with ``REPRO_WAL_GATE=1`` for the widened
+kill-point sweep (every record); they also run (sampled) in plain
+tier-1."""
+
+import io
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (SnapshotCorruption, TCQService, WALError,
+                        WALReplayError, WriteAheadLog)
+from repro.core import wal as walmod
+from repro.core.faultinject import (CrashingWAL, InjectedCrash,
+                                    corrupt_snapshot, flip_tail_byte,
+                                    torn_tail)
+from repro.graphs import powerlaw_temporal
+
+_GATE = os.environ.get("REPRO_WAL_GATE") == "1"
+
+
+# ------------------------------------------------------------ primitives
+def test_record_roundtrip():
+    arrays = {"u": np.arange(5, dtype=np.int64),
+              "w": np.linspace(0, 1, 3, dtype=np.float32)}
+    payload = walmod.encode_record("edges", {"epoch": 3}, arrays)
+    # encode_record frames the record: strip the length+crc header
+    body = payload[walmod._REC_HEADER.size:]
+    rec = walmod.decode_payload(body)
+    assert rec.kind == "edges" and rec.meta == {"epoch": 3}
+    assert set(rec.arrays) == {"u", "w"}
+    for k in arrays:
+        np.testing.assert_array_equal(rec.arrays[k], arrays[k])
+        assert rec.arrays[k].dtype == arrays[k].dtype
+
+
+def test_segment_append_read_rotate_gc(tmp_path):
+    d = str(tmp_path)
+    wal = WriteAheadLog(d, fsync="always")
+    for i in range(4):
+        assert wal.append("tick", {"i": i}) == i
+    seq0 = wal.active_seq
+    seq1 = wal.rotate()
+    assert seq1 == seq0 + 1
+    wal.append("tock", {"i": 99})
+    wal.close()
+    segs = walmod.list_segments(d)
+    assert [s for s, _ in segs] == [seq0, seq1]
+    recs, bad, _ = walmod.read_segment(segs[0][1])
+    assert bad is None and [r.meta["i"] for r in recs] == [0, 1, 2, 3]
+    # replay from a fresh log sees both sealed segments, in order
+    wal2 = WriteAheadLog(d, fsync="off")
+    assert [r.meta["i"] for r in wal2.replay(seq0)] == [0, 1, 2, 3, 99]
+    (tmp_path / "junk.tmp").write_bytes(b"x")
+    removed = wal2.gc(seq1)
+    assert any(p.endswith("junk.tmp") for p in removed)
+    assert [s for s, _ in walmod.list_segments(d)] == [seq1,
+                                                      wal2.active_seq]
+    wal2.close()
+
+
+@pytest.mark.parametrize("damage,reason", [("torn", "torn"),
+                                           ("flip", "corrupt")])
+def test_tail_damage_detected_and_cut(tmp_path, damage, reason):
+    d = str(tmp_path)
+    wal = WriteAheadLog(d, fsync="always")
+    for i in range(3):
+        wal.append("tick", {"i": i},
+                   {"a": np.arange(64, dtype=np.int64)})
+    wal.close()
+    (torn_tail if damage == "torn" else flip_tail_byte)(d)
+    path = walmod.list_segments(d)[-1][1]
+    recs, bad, valid = walmod.read_segment(path)
+    assert bad is not None and bad["reason"] == reason
+    assert [r.meta["i"] for r in recs] == [0, 1]
+    walmod.cut_segment(path, valid)
+    assert os.path.getsize(path) == valid
+    recs2, bad2, _ = walmod.read_segment(path)     # the cut is clean
+    assert bad2 is None and len(recs2) == 2
+
+
+def test_atomic_snapshot_checksum(tmp_path):
+    path = str(tmp_path / "snapshot-00000007.npz")
+    meta = {"version": 1, "epoch": 2}
+    arrays = {"x": np.arange(100, dtype=np.int32)}
+    walmod.write_snapshot_atomic(path, meta, arrays)
+    assert not [p for p in os.listdir(str(tmp_path))
+                if p.endswith(".tmp")]
+    got_meta, got_arrays = walmod.read_snapshot(path)
+    assert got_meta["epoch"] == 2 and "checksum" in got_meta
+    np.testing.assert_array_equal(got_arrays["x"], arrays["x"])
+    with open(path, "r+b") as f:                   # one flipped byte
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(SnapshotCorruption):
+        walmod.read_snapshot(path)
+
+
+# --------------------------------------------------- service-level drill
+def _graph():
+    return powerlaw_temporal(60, 360, 48, seed=5)
+
+
+def _ops(g, seed=0):
+    """Deterministic tape: admissions, a same-tick submit+cancel twin of
+    the first request (epoch 0, pre-ingest), ingest, a checkpoint."""
+    uts = g.unique_ts
+    n = int(uts.size)
+    reqs = [{"k": 2 + (i % 2), "ts": int(uts[a]), "te": int(uts[b])}
+            for i, (a, b) in enumerate([(0, n // 2), (n // 3, n - 1),
+                                        (n // 5, n // 2 + 2),
+                                        (1, n // 4)])]
+    rng = np.random.default_rng(seed)
+    V = int(g.num_vertices)
+
+    def batch(m):
+        u = rng.integers(0, V, size=m)
+        v = (u + 1 + rng.integers(0, V - 1, size=m)) % V
+        t = rng.integers(int(uts[0]), int(uts[-1]) + 1, size=m)
+        return (u.astype(np.int64), v.astype(np.int64),
+                t.astype(np.int64))
+
+    return ([("submit", reqs[0]), ("submit_cancel", reqs[0])]
+            + [("submit", r) for r in reqs[1:3]]
+            + [("edges", batch(16)), ("checkpoint",),
+               ("submit", reqs[3]), ("edges", batch(8))])
+
+
+def _drive(svc, ops, tickets=None):
+    tickets = {} if tickets is None else tickets
+    state = {"i": 0}
+
+    def poll(s):
+        if state["i"] >= len(ops):
+            return
+        op = ops[state["i"]]
+        state["i"] += 1
+        if op[0] == "submit":
+            tk = s.submit(dict(op[1]))
+            tickets[tk.id] = tk
+        elif op[0] == "submit_cancel":
+            tk = s.submit(dict(op[1]))
+            tickets[tk.id] = tk
+            s.cancel(tk)
+        elif op[0] == "edges":
+            s.push_edges(*op[1])
+        elif op[0] == "checkpoint" and s.wal is not None:
+            s.checkpoint()
+
+    while state["i"] < len(ops) or svc.pending:
+        svc.run_until_idle(poll)
+    return tickets
+
+
+def _digest(tk):
+    return sorted((k, tuple(c.vertices.tolist()), int(c.n_edges))
+                  for k, c in tk.result.by_tti().items())
+
+
+def _roster(d):
+    out = []
+    for _, path in walmod.list_segments(d):
+        recs, bad, _ = walmod.read_segment(path)
+        assert bad is None, (path, bad)
+        out.extend(recs)
+    return out
+
+
+def _svc(g, **kw):
+    return TCQService(g, use_kernel=False, **kw)
+
+
+def _check_prefix(rec_svc, prefix, precrash, ref, ref_twin):
+    """Recovery over one surviving prefix: every journaled admission is
+    accounted for and bit-identical to the fault-free reference."""
+    got = {tk.id: tk for tk in rec_svc.run_until_idle()}
+    cancelled = {int(r.meta["id"]) for r in prefix if r.kind == "cancel"}
+    for r in prefix:
+        if r.kind != "submit":
+            continue
+        rid = int(r.meta["id"])
+        tk = got.get(rid) or precrash.get(rid)
+        assert tk is not None and tk.done, f"admission #{rid} lost"
+        if rid in cancelled:
+            assert tk.status == "cancelled", (rid, tk.status)
+            continue
+        want = ref[rid]
+        if want.status == "cancelled":     # cancel fell off the tail
+            want = ref_twin[(tk.k, tk.h, tk.ts, tk.te, tk.epoch)]
+        assert _digest(tk) == _digest(want), rid
+    return got
+
+
+@pytest.fixture(scope="module")
+def drill():
+    """Shared fixture: graph, tape, fault-free reference, and one
+    completed journaled run (the mutilation target + kill roster)."""
+    g = _graph()
+    ops = _ops(g)
+    ref = _drive(_svc(g), ops)
+    ref_twin = {(tk.k, tk.h, tk.ts, tk.te, tk.epoch): tk
+                for tk in ref.values() if tk.status == "done"}
+    import tempfile
+    full_dir = tempfile.mkdtemp(prefix="tcq-walgate-")
+    svc = _svc(g, wal_dir=full_dir, fsync="always")
+    full = _drive(svc, ops)
+    svc.wal.close()
+    for rid in full:
+        if full[rid].status == "done":
+            assert _digest(full[rid]) == _digest(ref[rid])
+    roster = _roster(full_dir)
+    yield dict(g=g, ops=ops, ref=ref, ref_twin=ref_twin,
+               full_dir=full_dir, full=full, roster=roster)
+    shutil.rmtree(full_dir, ignore_errors=True)
+
+
+@pytest.mark.wal_gate
+def test_kill_after_every_record(drill, tmp_path):
+    """The kill-anywhere sweep: die right after record n lands, for
+    every n (REPRO_WAL_GATE=1) or a boundary sample (tier-1); recovery
+    + drain must be bit-identical over the n+1-record prefix — graph
+    fingerprint included."""
+    g, ops, roster = drill["g"], drill["ops"], drill["roster"]
+    R = len(roster)
+    fps, gg = [], g
+    for rec in roster:
+        if rec.kind == "edges":
+            gg = gg.add_edges(rec.arrays["u"], rec.arrays["v"],
+                              rec.arrays["t"])
+        fps.append(gg.fingerprint())
+    sig = [(r.kind, (r.meta or {}).get("id")) for r in roster]
+    e0 = next(i for i, r in enumerate(roster) if r.kind == "edges")
+    points = range(R) if _GATE else sorted({0, 1, e0, e0 + 1, R - 1})
+    for n in points:
+        d = str(tmp_path / f"kill{n}")
+        killer = CrashingWAL(WriteAheadLog(d, fsync="always"),
+                             crash_after_records=n)
+        seen = {}
+        with pytest.raises(InjectedCrash):
+            _drive(_svc(g, wal=killer), ops, seen)
+        prefix = _roster(d)
+        assert [(r.kind, (r.meta or {}).get("id"))
+                for r in prefix] == sig[:n + 1]
+        rec_svc = TCQService.recover(d, use_kernel=False)
+        _check_prefix(rec_svc, prefix, seen, drill["ref"],
+                      drill["ref_twin"])
+        assert rec_svc.graph.fingerprint() == fps[n], n
+        assert rec_svc.recovery_report["wal_records"] >= 0
+        rec_svc.wal.close()
+
+
+@pytest.mark.wal_gate
+@pytest.mark.parametrize("damage,reason", [(torn_tail, "torn"),
+                                           (flip_tail_byte, "corrupt")])
+def test_recover_from_damaged_tail(drill, tmp_path, damage, reason):
+    """A torn or bit-rotted tail record is detected (CRC), reported,
+    and physically cut — the drain over the shortened prefix stays
+    bit-identical (the damaged record was never acknowledged)."""
+    d = str(tmp_path / reason)
+    shutil.copytree(drill["full_dir"], d)
+    damage(d)
+    rec_svc = TCQService.recover(d, use_kernel=False)
+    rep = rec_svc.recovery_report
+    assert [e["reason"] for e in rep["tail_events"]] == [reason]
+    _check_prefix(rec_svc, drill["roster"][:-1], drill["full"],
+                  drill["ref"], drill["ref_twin"])
+    rec_svc.wal.close()
+
+
+@pytest.mark.wal_gate
+def test_corrupt_newest_snapshot_falls_back(drill, tmp_path):
+    """A corrupted newest snapshot is skipped; recovery restores the
+    previous retained checkpoint and replays its longer tail — nothing
+    is lost, nothing diverges."""
+    d = str(tmp_path / "snapfall")
+    shutil.copytree(drill["full_dir"], d)
+    corrupt_snapshot(d)
+    rec_svc = TCQService.recover(d, use_kernel=False)
+    rep = rec_svc.recovery_report
+    assert len(rep["snapshots_skipped"]) == 1
+    _check_prefix(rec_svc, drill["roster"], drill["full"],
+                  drill["ref"], drill["ref_twin"])
+    rec_svc.wal.close()
+
+
+def test_recover_mid_checkpoint_crash(drill, tmp_path):
+    """Die between the checkpoint's segment rotation and its snapshot
+    write (the worst ordering), with a stray half-written ``.tmp``
+    strewn in: recovery uses the previous snapshot + one more segment,
+    and the next checkpoint's GC sweeps the junk."""
+    g, ops = drill["g"], drill["ops"]
+    d = str(tmp_path / "rotcrash")
+    killer = CrashingWAL(WriteAheadLog(d, fsync="always"),
+                         crash_on_rotate=True)
+    seen = {}
+    with pytest.raises(InjectedCrash):
+        _drive(_svc(g, wal=killer), ops, seen)
+    junk = os.path.join(d, "snapshot-99999999.npz.tmp")
+    with open(junk, "wb") as f:
+        f.write(b"half a snapshot")
+    prefix = _roster(d)
+    rec_svc = TCQService.recover(d, use_kernel=False)
+    _check_prefix(rec_svc, prefix, seen, drill["ref"],
+                  drill["ref_twin"])
+    rec_svc.checkpoint()
+    assert not os.path.exists(junk)
+    rec_svc.wal.close()
+
+
+def test_replay_verifies_lineage_and_ids(drill, tmp_path):
+    """Replay is checked, not trusted: a journal whose records no longer
+    match what the service reproduces (wrong fingerprint, unknown kind)
+    raises WALReplayError instead of recovering silently wrong."""
+    d = str(tmp_path / "tamper")
+    shutil.copytree(drill["full_dir"], d)
+    # append a record whose lineage can't hold: an "edges" batch with a
+    # deliberately wrong fingerprint
+    wal = WriteAheadLog(d, fsync="always")
+    wal.append("edges", {"graph_epoch": 999, "num_edges": 1,
+                         "num_pairs": 1, "num_vertices": 1,
+                         "fingerprint": 12345},
+               {"u": np.array([1]), "v": np.array([2]),
+                "t": np.array([3])})
+    wal.rotate()            # seal it so recovery replays it
+    wal.close()
+    with pytest.raises(WALReplayError):
+        TCQService.recover(d, use_kernel=False)
+
+
+def test_recover_empty_dir_raises(tmp_path):
+    with pytest.raises(WALError):
+        TCQService.recover(str(tmp_path / "nothing-here"))
+
+
+def test_journal_off_by_default():
+    g = _graph()
+    svc = _svc(g)
+    assert svc.wal is None
+    svc.submit({"k": 2, "ts": int(g.unique_ts[0]),
+                "te": int(g.unique_ts[-1])})
+    svc.run_until_idle()
+    assert "wal" not in svc.stats
+
+
+def test_snapshot_includes_live_pool(drill):
+    """A snapshot taken from a mid-pool hook still covers the running
+    pool's unresolved members — the fix that makes checkpoint() safe
+    anywhere on the tape."""
+    g = drill["g"]
+    svc = _svc(g)
+    uts = g.unique_ts
+    for i in range(3):
+        svc.submit({"k": 2, "ts": int(uts[0]),
+                    "te": int(uts[-1 - i])})
+    snaps = []
+
+    def poll(s):
+        if not snaps and s._inflight:
+            snaps.append(s.snapshot())
+    svc.run_until_idle(poll)
+    assert snaps, "poll never saw a live pool"
+    ids = {t["id"] for t in snaps[0]["tickets"]}
+    assert ids, "mid-pool snapshot dropped the running tickets"
+    restored = TCQService.restore(snaps[0], use_kernel=False)
+    got = {tk.id: tk for tk in restored.run_until_idle()}
+    assert set(got) == ids
+    by_id = {tk.id: tk for tk in svc.completed}
+    for rid in ids:
+        assert _digest(got[rid]) == _digest(by_id[rid])
